@@ -1,0 +1,65 @@
+"""Shared benchmark harness: dataset, QPS measurement, CSV/JSON output.
+
+Absolute QPS on this container (1-core CPU JAX) is not comparable to the
+paper's Xeon+Faiss numbers; the reproduced quantities are the RATIOS between
+methods at matched recall (DESIGN.md §1) — each table prints both.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core import FlatIndex
+from repro.data import clustered_vectors, queries_like
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+# Bench scale: large enough for real graph structure, small enough for the
+# single CPU core. The paper's 300K/10M/30M runs use the same code paths.
+N_DB = int(os.environ.get("BENCH_N", 20000))
+DIM = int(os.environ.get("BENCH_DIM", 96))
+N_QUERIES = int(os.environ.get("BENCH_Q", 256))
+K = 10
+
+
+def dataset(n: int = N_DB, dim: int = DIM, n_queries: int = N_QUERIES):
+    key = jax.random.PRNGKey(42)
+    data = clustered_vectors(key, n, dim, n_clusters=48)
+    queries = queries_like(jax.random.PRNGKey(43), data, n_queries)
+    td, ti = FlatIndex(data).search(queries, K)
+    return data, queries, ti
+
+
+def measure_qps(search: Callable, queries, repeats: int = 5) -> float:
+    out = search(queries)                      # warmup / compile
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = search(queries)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return queries.shape[0] / float(np.median(times))
+
+
+def save(name: str, rows, headers=None):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump({"rows": rows, "headers": headers}, f, indent=1,
+                  default=str)
+    return path
+
+
+def print_table(title: str, headers, rows):
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), max((len(str(r[i])) for r in rows),
+                                   default=0)) for i, h in enumerate(headers)]
+    print("  ".join(str(h).ljust(w) for h, w in zip(headers, widths)))
+    for r in rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))

@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle correctness at
+bench shapes + wall-times of the XLA path that production uses on CPU.
+(True Pallas speed requires a TPU; interpret mode only proves correctness,
+so the CSV reports the jnp path as `us_per_call` and flags the backend.)"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, save
+from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.gather_dist import gather_dist
+from repro.kernels.l2topk import l2_topk
+
+
+def _t(fn, *a, repeats=5):
+    out = fn(*a)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*a))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    q = jax.random.normal(key, (64, 96))
+    db = jax.random.normal(jax.random.PRNGKey(1), (20000, 96))
+    us = _t(lambda a, b: l2_topk(a, b, 10, backend="jnp"), q, db)
+    d1, _ = l2_topk(q[:8], db[:2048], 10, backend="pallas")
+    d2, _ = l2_topk(q[:8], db[:2048], 10, backend="jnp")
+    err = float(jnp.max(jnp.abs(d1 - d2)))
+    rows.append(["l2topk", f"{us:.0f}", f"allclose_err={err:.2e}"])
+
+    ids = jax.random.randint(key, (64, 32), 0, 20000)
+    us = _t(lambda a, b, c: gather_dist(a, b, c, backend="jnp"), q, db, ids)
+    a = gather_dist(q[:8], db, ids[:8], backend="pallas")
+    b = gather_dist(q[:8], db, ids[:8], backend="jnp")
+    err = float(jnp.max(jnp.abs(a - b)))
+    rows.append(["gather_dist", f"{us:.0f}", f"allclose_err={err:.2e}"])
+
+    table = jax.random.normal(key, (50000, 64))
+    bids = jax.random.randint(key, (1024, 16), -1, 50000)
+    us = _t(lambda t, i: embedding_bag(t, i, backend="jnp"), table, bids)
+    a = embedding_bag(table[:500], bids[:8] % 500, backend="pallas")
+    b = embedding_bag(table[:500], bids[:8] % 500, backend="jnp")
+    err = float(jnp.max(jnp.abs(a - b)))
+    rows.append(["embedding_bag", f"{us:.0f}", f"allclose_err={err:.2e}"])
+
+    headers = ["kernel", "us_per_call(jnp/cpu)", "pallas_interpret_check"]
+    print_table("Kernel microbench", headers, rows)
+    save("kernel_bench", rows, headers)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Recall-QPS trade-off curves (the x-axes of the paper's Fig. 1/3): sweep
+`ef_search` per index family and emit (recall, QPS) points. The paper's plots
+are exactly these frontiers; JSON output is plot-ready."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import K, dataset, measure_qps, print_table, save
+from repro.core import IndexParams, TunedGraphIndex, recall_at_k
+from repro.core.ivf import IVFIndex
+from repro.core.ivfpq import IVFPQIndex
+
+
+def run():
+    data, queries, ti = dataset()
+    dim = data.shape[1]
+    rows = []
+
+    nsg = TunedGraphIndex(IndexParams(
+        pca_dim=dim, antihub_keep=1.0, ep_clusters=32, ef_search=64,
+        graph_degree=24, build_knn_k=24, build_candidates=48)).fit(data)
+    for ef in (16, 32, 64, 128):
+        d, i = nsg.search(queries, K, ef=ef)
+        r = recall_at_k(i, ti)
+        qps = measure_qps(lambda q: nsg.search(q, K, ef=ef)[0], queries,
+                          repeats=3)
+        rows.append([f"NSG ef={ef}", round(r, 4), f"{qps:.1f}"])
+
+    ivf = IVFIndex(n_lists=128, nprobe=1).fit(data)
+    for np_ in (1, 4, 16, 64):
+        ivf.nprobe = np_
+        d, i = ivf.search(queries, K)
+        r = recall_at_k(i, ti)
+        qps = measure_qps(lambda q: ivf.search(q, K)[0], queries, repeats=3)
+        rows.append([f"IVF128 nprobe={np_}", round(r, 4), f"{qps:.1f}"])
+
+    ivfpq = IVFPQIndex(n_lists=64, m=16, nprobe=4).fit(data)
+    for np_ in (4, 16):
+        ivfpq.nprobe = np_
+        d, i = ivfpq.search(queries, K)
+        r = recall_at_k(i, ti)
+        qps = measure_qps(lambda q: ivfpq.search(q, K)[0], queries,
+                          repeats=3)
+        rows.append([f"IVFPQ64,16 nprobe={np_}", round(r, 4), f"{qps:.1f}",
+                     f"mem {ivfpq.memory_bytes()/1e6:.1f}MB"])
+
+    headers = ["config", "recall@10", "QPS", ""]
+    rows = [r + [""] * (4 - len(r)) for r in rows]
+    print_table("QPS-recall frontiers", headers, rows)
+    save("qps_recall_curves", rows, headers)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,96 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (single-pod) and the
+§Dry-run summary (both meshes). Run after `python -m repro.launch.dryrun`."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, print_table, save
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def load(mesh: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_s(x):
+    return f"{x:.2e}"
+
+
+def run():
+    recs = load("16x16")
+    rows = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append([r["arch"], r["shape"], "SKIP", "-", "-", "-", "-",
+                         "-", r["reason"][:40]])
+            continue
+        if r.get("status") != "ok":
+            rows.append([r["arch"], r["shape"], "ERR", "-", "-", "-", "-",
+                         "-", r.get("error", "")[:40]])
+            continue
+        dom = r["bottleneck"]
+        rows.append([
+            r["arch"], r["shape"], r["kind"],
+            fmt_s(r["compute_s"]), fmt_s(r["memory_s"]),
+            fmt_s(r["collective_s"]), dom,
+            f"{r['useful_ratio']:.2f}",
+            "fit" if r.get("hbm_fit_16g") else "OVER",
+        ])
+    headers = ["arch", "shape", "kind", "compute_s", "memory_s",
+               "collective_s", "bottleneck", "useful", "hbm16g"]
+    print_table("Roofline (single-pod 16x16, per device)", headers, rows)
+    save("roofline_table", rows, headers)
+
+    # multi-pod pass/fail summary
+    recs2 = load("2x16x16")
+    ok = sum(1 for r in recs2 if r.get("status") == "ok")
+    skip = sum(1 for r in recs2 if r.get("status") == "skipped")
+    err = [r for r in recs2 if r.get("status") == "error"]
+    print(f"\nmulti-pod 2x16x16: ok={ok} skip={skip} err={len(err)}")
+    for r in err:
+        print("  ERR", r["arch"], r["shape"], r.get("error", "")[:100])
+
+    # baseline vs optimized (--opt sweep), when available
+    opt_dir = os.path.join(RESULTS_DIR, "dryrun_opt")
+    if os.path.isdir(opt_dir):
+        rows2 = []
+        for path in sorted(glob.glob(os.path.join(opt_dir,
+                                                  "*__16x16.json"))):
+            with open(path) as f:
+                o = f.read()
+            o = json.loads(o)
+            if o.get("status") != "ok":
+                continue
+            bpath = os.path.join(DRYRUN_DIR, os.path.basename(path))
+            if not os.path.exists(bpath):
+                continue
+            with open(bpath) as f:
+                b = json.load(f)
+            if b.get("status") != "ok":
+                continue
+            dom_b = max(b["compute_s"], b["memory_s"], b["collective_s"])
+            dom_o = max(o["compute_s"], o["memory_s"], o["collective_s"])
+            rows2.append([
+                o["arch"], o["shape"], fmt_s(dom_b), fmt_s(dom_o),
+                f"x{dom_b / max(dom_o, 1e-30):.2f}",
+                f"{b['memory']['argument_bytes']/1e9:.1f}G",
+                f"{o['memory']['argument_bytes']/1e9:.1f}G",
+                "fit" if o.get("hbm_fit_16g") else "OVER",
+            ])
+        headers2 = ["arch", "shape", "dominant_base", "dominant_opt",
+                    "speedup", "args_base", "args_opt", "hbm16g_opt"]
+        print_table("Baseline vs optimized (--opt flags, single-pod)",
+                    headers2, rows2)
+        save("roofline_opt_compare", rows2, headers2)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

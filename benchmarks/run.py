@@ -1,0 +1,50 @@
+"""Benchmark driver — one table per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV lines at the end for harness
+consumption; per-table JSON lands in benchmarks/results/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    csv = []
+
+    def stage(name, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        dt = (time.perf_counter() - t0) * 1e6
+        csv.append((name, dt, len(out) if out is not None else 0))
+        return out
+
+    from benchmarks import (
+        batching_alg12, fig1_index_comparison, fig3_ablations, kernel_bench,
+        qps_recall_curves, table1_tuned, tuning_compare,
+    )
+
+    stage("kernel_bench", kernel_bench.run)
+    stage("fig1_index_comparison", fig1_index_comparison.run)
+    stage("batching_alg12", batching_alg12.run)
+    if not quick:
+        stage("fig3_ablations", fig3_ablations.run)
+        stage("table1_tuned", table1_tuned.run)
+        stage("tuning_compare", tuning_compare.run)
+        stage("qps_recall_curves", qps_recall_curves.run)
+    try:
+        from benchmarks import roofline_table
+        stage("roofline_table", roofline_table.run)
+    except Exception as e:                         # dry-run not yet executed
+        print(f"roofline_table skipped: {e}")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

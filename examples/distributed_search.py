@@ -1,0 +1,45 @@
+"""Sharded-index serving demo on 8 simulated devices (2 data x 4 model).
+
+Shows the production layout end to end: per-shard NSG builds, row-sharded
+database, query fan-out + top-k merge — the same SPMD program the 512-chip
+dry-run compiles.
+
+    PYTHONPATH=src python examples/distributed_search.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+from repro.core import FlatIndex, IndexParams, recall_at_k  # noqa: E402
+from repro.core.distributed import ShardedIndex  # noqa: E402
+from repro.data import clustered_vectors, queries_like  # noqa: E402
+from repro.launch.mesh import make_host_mesh  # noqa: E402
+
+
+def main():
+    print(f"devices: {jax.device_count()}")
+    mesh = make_host_mesh(data=2, model=4)
+    key = jax.random.PRNGKey(0)
+    data = clustered_vectors(key, 6000, 48, n_clusters=24)
+    queries = queries_like(jax.random.PRNGKey(1), data, 64)
+    _, true_i = FlatIndex(data).search(queries, 10)
+
+    print("building 4 index shards (each its own NSG + entry points)...")
+    idx = ShardedIndex(IndexParams(
+        pca_dim=32, antihub_keep=0.95, ep_clusters=8, ef_search=48,
+        graph_degree=16, build_knn_k=16, build_candidates=32), mesh)
+    idx.fit(data)
+
+    d, i = idx.search(queries, 10)
+    r = recall_at_k(i, true_i)
+    print(f"sharded recall@10 = {r:.4f} over {idx.n_shards} shards")
+    print("per-device array shards:")
+    for db in idx.arrays.base.addressable_shards[:4]:
+        print(f"  device {db.device} -> base{db.data.shape}")
+    assert r >= 0.85
+
+
+if __name__ == "__main__":
+    main()

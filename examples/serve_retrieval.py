@@ -1,0 +1,70 @@
+"""Serve two-tower retrieval THROUGH the paper's tuned graph index.
+
+The item tower's embeddings become the ANN database; batched user requests
+retrieve top-k via (a) exact brute force and (b) the tuned NSG index — the
+paper's technique applied to a production retrieval model end to end.
+
+    PYTHONPATH=src python examples/serve_retrieval.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import FlatIndex, IndexParams, TunedGraphIndex, recall_at_k
+from repro.data import recsys_batch
+from repro.models import recsys
+
+
+def main():
+    cfg = get_arch("two-tower-retrieval").smoke_config
+    key = jax.random.PRNGKey(0)
+    params = recsys.INIT["two-tower-retrieval"](key, cfg)
+    n_items = min(500, cfg.table_vocabs[2])   # distinct item embeddings only
+
+    print("1) (mini-)train the towers in-batch")
+    from repro.optim import adamw
+    from repro.train.train_step import make_train_step
+    opt = adamw(1e-3)
+    step = jax.jit(make_train_step(
+        lambda p, b: recsys.LOSS["two-tower-retrieval"](p, cfg, b), opt))
+    state = opt.init(params)
+    for i in range(10):
+        batch = recsys_batch(jax.random.PRNGKey(i), 64, cfg)
+        params, state, m = step(params, state, batch)
+    print(f"   loss {float(m['loss']):.3f}")
+
+    print("2) embed the item corpus -> ANN database")
+    item_ids = jnp.arange(n_items) % cfg.table_vocabs[2]
+    cate_ids = item_ids % cfg.table_vocabs[3]
+    corpus = recsys.item_embed(params, cfg, item_ids, cate_ids)
+
+    print("3) build the tuned graph index over item embeddings")
+    # note: barely-trained towers put items ~uniform on the sphere (flat
+    # PCA spectrum) -> the D knob has no headroom here, exactly the paper's
+    # data-dependence caveat; the tuner would discover pca_dim ~= D0 itself.
+    index = TunedGraphIndex(IndexParams(
+        pca_dim=corpus.shape[1], antihub_keep=1.0, ep_clusters=16,
+        ef_search=64, graph_degree=16, build_knn_k=16,
+        build_candidates=48)).fit(corpus)
+
+    print("4) serve batched user requests")
+    reqs = recsys_batch(jax.random.PRNGKey(99), 64, cfg)
+    users = recsys.user_embed(params, cfg, reqs)
+    t0 = time.perf_counter()
+    _, exact = FlatIndex(corpus).search(users, 10)
+    t_exact = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _, approx = index.search(users, 10)
+    t_ann = time.perf_counter() - t0
+    r = recall_at_k(approx, exact)
+    print(f"   recall@10 vs exact: {r:.4f}")
+    print(f"   exact {64 / t_exact:.0f} q/s, tuned-NSG {64 / t_ann:.0f} q/s "
+          f"(small corpus; the gap widens with N — see benchmarks/fig1)")
+    assert r >= 0.8
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end LM training driver: fault-tolerant loop, checkpoints, resume.
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 40
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+`100m` is a ~100M-param qwen3-family config (the assignment's train target);
+`tiny` finishes on this CPU container in about a minute and exercises the
+identical code path (scan layers, remat, microbatching, async checkpoints,
+straggler watchdog, resume).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.data import lm_batch
+from repro.models import transformer
+from repro.optim import adamw, cosine_schedule
+from repro.train.train_step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+PRESETS = {
+    "tiny": LMConfig(name="tiny", n_layers=2, d_model=128, n_heads=4,
+                     n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=1009,
+                     qk_norm=True, dtype="float32"),
+    "100m": LMConfig(name="qwen3-100m", n_layers=12, d_model=768, n_heads=12,
+                     n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000,
+                     qk_norm=True, dtype="float32"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    print(f"config {cfg.name}: "
+          f"{cfg.param_count()/1e6:.1f}M params")
+
+    opt = adamw(cosine_schedule(3e-3, warmup=5, total=args.steps))
+    loss_fn = lambda p, b: transformer.lm_loss(p, cfg, b)
+    inner = jax.jit(make_train_step(loss_fn, opt,
+                                    microbatches=args.microbatches),
+                    donate_argnums=(0, 1))
+
+    def step_fn(state, batch):
+        params, opt_state = state
+        params, opt_state, metrics = inner(params, opt_state, batch)
+        return (params, opt_state), metrics
+
+    def batch_fn(step):   # pure in step -> exact resume replay
+        return lm_batch(jax.random.PRNGKey(step), args.batch, args.seq,
+                        cfg.vocab_size)
+
+    trainer = Trainer(step_fn, batch_fn,
+                      TrainerConfig(total_steps=args.steps, ckpt_every=10,
+                                    ckpt_dir=args.ckpt_dir, log_every=5))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    init_state = (params, opt.init(params))
+    if args.resume:
+        state, start = trainer.restore_or_init(init_state)
+        print(f"resuming at step {start}")
+    else:
+        state, start = init_state, 0
+    trainer.run(state, start_step=start)
+    for i, h in enumerate(trainer.history):
+        print(f"  log[{i}] loss={h['loss']:.4f} ppl={h['ppl']:.1f} "
+              f"gnorm={h['grad_norm']:.2f}")
+    losses = [h["loss"] for h in trainer.history]
+    assert losses[-1] < losses[0], "loss should decrease"
+    print(f"done: loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+          f"checkpoints at {trainer.ckpt.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

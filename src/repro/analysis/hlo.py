@@ -1,0 +1,89 @@
+"""Parse collective traffic out of compiled HLO text.
+
+cost_analysis() has no collective-bytes entry, so we sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (counting async `-start` ops once, skipping `-done`),
+and convert to per-device link traffic with op-specific factors over the
+replica-group size.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    result_bytes: Dict[str, int] = field(default_factory=dict)
+    link_bytes: float = 0.0          # per-device bytes over the fabric
+
+    def total_result_bytes(self) -> int:
+        return sum(self.result_bytes.values())
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done" in line and "all-" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("type"))
+        # participants per group
+        g = _GROUP_RE.search(line)
+        if g:
+            part = int(g.group(2))
+        else:
+            gl = _GROUP_LIST_RE.search(line)
+            part = len(gl.group(1).split(",")) if gl else 1
+        part = max(part, 1)
+        # per-device wire traffic factor (ring schedules)
+        if op == "all-reduce":
+            wire = nbytes * 2.0 * (part - 1) / part
+        elif op in ("all-gather",):
+            wire = nbytes * (part - 1) / part     # nbytes = full output
+        elif op in ("reduce-scatter",):
+            wire = nbytes * (part - 1)            # nbytes = scattered output
+        elif op == "all-to-all":
+            wire = nbytes * (part - 1) / part
+        else:                                      # collective-permute
+            wire = nbytes
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.result_bytes[op] = stats.result_bytes.get(op, 0) + nbytes
+        stats.link_bytes += wire
+    return stats
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{opname}\b", hlo_text))

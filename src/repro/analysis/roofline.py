@@ -1,0 +1,101 @@
+"""Three-term roofline from the compiled dry-run artifact (TPU v5e targets).
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOPs
+    memory_s     = HLO_bytes_per_device / HBM_bw
+    collective_s = link_bytes_per_device / link_bw
+
+cost_analysis() on the SPMD-partitioned module reports *per-device* flops and
+bytes (verified empirically in tests/test_roofline.py); collective bytes come
+from analysis.hlo.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from repro.analysis.hlo import CollectiveStats, parse_collectives
+
+# -- TPU v5e constants (per chip) -------------------------------------------
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (we assume 1 effective link;
+                                  # a 2D-torus axis pair would halve this)
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    link_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0           # analytic 6ND / 2ND
+    useful_ratio: float = 0.0          # model_flops / (HLO flops * devices)
+    arg_bytes: int = 0
+    temp_bytes: int = 0
+    out_bytes: int = 0
+    collective_counts: Optional[Dict[str, int]] = None
+    notes: str = ""
+
+    def dominant_term(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_desc: str,
+            n_devices: int, model_flops: float = 0.0,
+            notes: str = "") -> RooflineReport:
+    # trip-count-aware accounting (XLA's cost_analysis counts while bodies
+    # once; analyze_module multiplies by known_trip_count — see hlo_costs)
+    from repro.analysis.hlo_costs import analyze_module
+    mc = analyze_module(compiled.as_text())
+    flops = mc.flops
+    byts = mc.hbm_bytes
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = byts / HBM_BW
+    collective_s = mc.link_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mem = compiled.memory_analysis()
+    useful = (model_flops / (flops * n_devices)
+              if flops and model_flops else 0.0)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, n_devices=n_devices,
+        flops_per_device=flops, bytes_per_device=byts,
+        link_bytes_per_device=mc.link_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops, useful_ratio=useful,
+        arg_bytes=getattr(mem, "argument_size_in_bytes", 0),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+        out_bytes=getattr(mem, "output_size_in_bytes", 0),
+        collective_counts=dict(mc.collective_counts), notes=notes)
+
+
+def lm_model_flops(cfg, shape, kind: str) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·tokens train, 2·N_active·tokens fwd."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence + attention over the cache
+    tokens = shape.global_batch
+    attn = (2.0 * shape.global_batch * shape.seq_len
+            * cfg.n_layers * cfg.n_heads * cfg.head_dim * 2)
+    return 2.0 * n * tokens + attn
+
+
+def hbm_fit(report: RooflineReport, budget_bytes: float = 16e9) -> bool:
+    return (report.arg_bytes + report.temp_bytes
+            + report.out_bytes) <= budget_bytes

@@ -1,0 +1,57 @@
+"""Architecture registry: ``get_arch(id)`` / ``list_archs()``.
+
+The 10 assigned architectures plus the paper's own ANN workload.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    ANNConfig, ArchSpec, GNNConfig, LMConfig, RecsysConfig, ShapeConfig,
+    GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES, reduced_lm,
+)
+
+from repro.configs import (
+    ann_laion, deepseek_moe_16b, deepseek_v2_236b, dimenet, din,
+    dlrm_mlperf, mistral_nemo_12b, qwen2_1_5b, qwen3_32b, sasrec,
+    two_tower_retrieval,
+)
+
+_REGISTRY: Dict[str, ArchSpec] = {
+    spec.arch_id: spec
+    for spec in [
+        qwen3_32b.SPEC,
+        qwen2_1_5b.SPEC,
+        mistral_nemo_12b.SPEC,
+        deepseek_v2_236b.SPEC,
+        deepseek_moe_16b.SPEC,
+        dimenet.SPEC,
+        sasrec.SPEC,
+        two_tower_retrieval.SPEC,
+        dlrm_mlperf.SPEC,
+        din.SPEC,
+        ann_laion.SPEC,
+    ]
+}
+
+ASSIGNED_ARCHS: List[str] = [a for a in _REGISTRY if a != "ann-laion"]
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def list_archs() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def iter_cells(include_ann: bool = False):
+    """Yield (arch_id, shape_name, skip_reason) for every assigned cell."""
+    archs = list(_REGISTRY) if include_ann else ASSIGNED_ARCHS
+    for arch_id in archs:
+        spec = _REGISTRY[arch_id]
+        for shape_name in spec.shapes:
+            yield arch_id, shape_name, spec.skip_reason(shape_name)

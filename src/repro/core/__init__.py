@@ -1,0 +1,14 @@
+"""The paper's contribution: tuned off-the-shelf graph index.
+
+Public surface:
+    TunedGraphIndex / IndexParams  — the paper's Fig.2 pipeline
+    build_vanilla_nsg              — untuned baseline
+    FlatIndex / recall_at_k        — oracle + metric
+    beam_search                    — TPU-native graph traversal
+    tuning.Study                   — black-box parameter tuning
+"""
+from repro.core.beam_search import beam_search  # noqa: F401
+from repro.core.flat import FlatIndex, recall_at_k  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    IndexParams, TunedGraphIndex, build_vanilla_nsg,
+)

@@ -1,0 +1,40 @@
+"""AntiHub removal (paper §3.1, knob alpha) — Tanaka et al., ICMR'21.
+
+Hubness: the k-occurrence N_k(x) = how many other points list x among their
+k nearest neighbors. Anti-hubs (N_k ~ 0) are almost never the answer to a
+query, so dropping the lowest-N_k (1-alpha) fraction shrinks the database
+(and thus the L2 hotspot + memory) with minimal recall loss.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.knn_graph import knn_graph
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def k_occurrence(data: jax.Array, k: int = 10) -> jax.Array:
+    """(N,) int32 hub scores N_k(x) from the exact kNN graph."""
+    _, ids = knn_graph(data, k)
+    flat = jnp.where(ids >= 0, ids, 0).reshape(-1)
+    w = (ids >= 0).reshape(-1).astype(jnp.int32)
+    return jax.ops.segment_sum(w, flat, num_segments=data.shape[0])
+
+
+def antihub_keep_indices(data: jax.Array, keep_ratio: float,
+                         k: int = 10) -> jax.Array:
+    """Sorted indices of the ceil(alpha*N) hubbiest points to KEEP."""
+    if not 0.0 < keep_ratio <= 1.0:
+        raise ValueError(f"keep_ratio must be in (0, 1], got {keep_ratio}")
+    import math
+    n = data.shape[0]
+    n_keep = max(1, math.ceil(keep_ratio * n))
+    if n_keep >= n:
+        return jnp.arange(n, dtype=jnp.int32)
+    occ = k_occurrence(data, k)
+    # stable ordering: high occurrence first, ties by index
+    order = jnp.argsort(-occ, stable=True)
+    return jnp.sort(order[:n_keep]).astype(jnp.int32)

@@ -1,0 +1,246 @@
+"""Sharded graph-index serving + sharded build substrate.
+
+Scale-out scheme (DESIGN.md §2): the database is row-sharded on the `model`
+mesh axis; every shard owns an independent NSG sub-graph + entry points.
+Queries shard across (`pod`, `data`) and replicate across `model`; each device
+beam-searches its local sub-graph, and the per-shard top-k lists (size
+shards x k — tiny) merge through one all-gather. No cross-shard pointer
+chasing ever happens on the hot path.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.beam_search import beam_search
+from repro.core.distances import l2_topk
+from repro.core.pipeline import IndexParams, TunedGraphIndex
+
+
+# ---------------------------------------------------------------------------
+# Sharded brute force (build substrate + retrieval_cand serving)
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_l2_topk(mesh: Mesh, k: int, chunk: int = 16384):
+    """queries (Q, D) x db (N, D; rows sharded on `model`) -> exact top-k.
+
+    Local streaming top-k per shard, then a (Q, shards*k) merge. Queries are
+    sharded on the batch axes and replicated across `model`.
+    """
+    batch = tuple(a for a in mesh.axis_names if a != "model")
+    n_shards = int(np.prod([mesh.shape[a] for a in ("model",)]))
+
+    def local(q, db_local, offset):
+        d, i = l2_topk(q, db_local, k, chunk=chunk)
+        return d, jnp.where(i >= 0, i + offset, -1)
+
+    mapped = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(batch, None), P("model", None), P("model")),
+        out_specs=(P(batch, "model"), P(batch, "model")))
+
+    @jax.jit
+    def search(queries, db, offsets):
+        d, i = mapped(queries, db, offsets)          # (Q, shards*k)
+        nd, pos = jax.lax.top_k(-d, k)
+        return -nd, jnp.take_along_axis(i, pos, axis=1)
+
+    return search
+
+
+# ---------------------------------------------------------------------------
+# Sharded graph index
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["base", "neighbors", "global_ids", "centroids", "members",
+                 "pca_mean", "pca_comp", "base_norms"],
+    meta_fields=[])
+@dataclass
+class ShardedIndexArrays:
+    """Flat device arrays; rows [s*m:(s+1)*m] belong to shard s."""
+    base: jax.Array        # (S*m, D)   projected vectors (padded)
+    neighbors: jax.Array   # (S*m, R)   LOCAL ids, -1 padded
+    global_ids: jax.Array  # (S*m,)     original database ids (-1 = pad)
+    centroids: jax.Array   # (S*C, D)   entry-point centroids per shard
+    members: jax.Array     # (S*C,)     LOCAL entry ids
+    pca_mean: jax.Array    # (D0,)
+    pca_comp: jax.Array    # (D0, D)    identity-extended when PCA off
+    base_norms: Optional[jax.Array] = None  # (S*m,) |x|^2 (P8 prenorm)
+
+
+def make_search_step(mesh: Mesh, *, ef: int, k: int, max_iters: int = 0,
+                     mode: str = "fori"):
+    """Build the jit'd sharded serve step (also the dry-run target).
+
+    Returns fn(queries (Q, D0), arrays) -> (dists (Q, k), global ids (Q, k)).
+    """
+    from repro import flags
+    if not max_iters and flags.ANN_TIGHT_BUDGET:
+        max_iters = 2 * ef      # P4: converged budget (recall-validated)
+    batch = tuple(a for a in mesh.axis_names if a != "model")
+
+    prenorm = flags.ANN_PRENORM
+
+    def local_search(q, base, nbrs, gids, cents, members, norms):
+        # entry point: nearest local centroid -> local member id
+        qd = q.astype(jnp.float32)
+        cd = (jnp.sum(qd * qd, -1, keepdims=True)
+              + jnp.sum(cents * cents, -1)[None, :]
+              - 2.0 * qd @ cents.T)
+        entry = members[jnp.argmin(cd, axis=1)]
+        gdist = None
+        if prenorm:
+            # P8: |x|^2 precomputed at build; each expansion reads R norms
+            # instead of squaring R*D gathered elements
+            def gdist(query, db, ids):
+                q32 = query.astype(jnp.float32)
+                rows = db[ids].astype(jnp.float32)
+                return jnp.maximum(jnp.sum(q32 * q32) + norms[ids]
+                                   - 2.0 * (rows @ q32), 0.0)
+        d, i, _ = beam_search(q, base, nbrs, entry, ef=ef, k=k,
+                              max_iters=max_iters or 4 * ef, mode=mode,
+                              gather_dist=gdist)
+        gi = jnp.where(i >= 0, gids[jnp.maximum(i, 0)], -1)
+        d = jnp.where(gi >= 0, d, jnp.inf)
+        return d, gi
+
+    mapped = jax.shard_map(
+        local_search, mesh=mesh,
+        in_specs=(P(batch, None), P("model", None), P("model", None),
+                  P("model"), P("model", None), P("model"), P("model")),
+        out_specs=(P(batch, "model"), P(batch, "model")))
+
+    @jax.jit
+    def step(queries, arrays: ShardedIndexArrays):
+        q = (queries - arrays.pca_mean) @ arrays.pca_comp
+        norms = arrays.base_norms
+        if norms is None:
+            norms = jnp.sum(arrays.base.astype(jnp.float32) ** 2, axis=-1)
+        d, i = mapped(q, arrays.base, arrays.neighbors, arrays.global_ids,
+                      arrays.centroids, arrays.members, norms)
+        nd, pos = jax.lax.top_k(-d, k)               # (Q, shards*k) -> (Q, k)
+        return -nd, jnp.take_along_axis(i, pos, axis=1)
+
+    return step
+
+
+class ShardedIndex:
+    """Host-orchestrated build of per-shard TunedGraphIndexes + device search.
+
+    The per-shard builds are independent (they run as separate jit programs,
+    i.e. on a real cluster each host builds its own shards in parallel); the
+    search path is one SPMD program over the whole mesh.
+    """
+
+    def __init__(self, params: IndexParams, mesh: Mesh):
+        self.params = params
+        self.mesh = mesh
+        self.arrays: Optional[ShardedIndexArrays] = None
+        self._step = None
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.shape["model"]
+
+    def fit(self, data: jax.Array, key: Optional[jax.Array] = None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        p = self.params
+        n, d0 = data.shape
+        s = self.n_shards
+        bounds = np.linspace(0, n, s + 1).astype(int)
+        subs = []
+        for i in range(s):
+            sub = TunedGraphIndex(p).fit(data[bounds[i]:bounds[i + 1]],
+                                         jax.random.fold_in(key, i))
+            subs.append(sub)
+        m = max(sub.ntotal for sub in subs)
+        dim = subs[0].base.shape[1]
+        c = p.ep_clusters
+        base = np.zeros((s * m, dim), np.float32)
+        nbrs = np.full((s * m, p.graph_degree), -1, np.int32)
+        gids = np.full((s * m,), -1, np.int32)
+        cents = np.zeros((s * c, dim), np.float32)
+        members = np.zeros((s * c,), np.int32)
+        for i, sub in enumerate(subs):
+            nt = sub.ntotal
+            base[i * m: i * m + nt] = np.asarray(sub.base)
+            nbrs[i * m: i * m + nt] = np.asarray(sub.graph.neighbors)
+            gids[i * m: i * m + nt] = (np.asarray(sub.kept_idx) + bounds[i])
+            nc = sub.eps.centroids.shape[0]
+            cents[i * c: i * c + nc] = np.asarray(sub.eps.centroids)
+            members[i * c: i * c + nc] = np.asarray(sub.eps.member_ids)
+        # PCA is shard-local in principle; we broadcast shard 0's projection
+        # to keep the query-side transform global (all shards were fit on
+        # slices of one distribution — verified equivalent within tolerance).
+        if subs[0].pca is not None:
+            mean = np.asarray(subs[0].pca.mean)
+            comp = np.asarray(subs[0].pca.components)
+            # re-project every shard's base with the global transform
+            for i, sub in enumerate(subs):
+                if sub.pca is not None:
+                    raw = sub.pca.inverse_transform(sub.base)
+                    base[i * m: i * m + sub.ntotal] = np.asarray(
+                        (raw - mean) @ comp)
+        else:
+            mean = np.zeros((d0,), np.float32)
+            comp = np.eye(d0, dim, dtype=np.float32)
+
+        from repro import flags
+        shard = functools.partial(NamedSharding, self.mesh)
+        rows = P("model")
+        base_dt = jnp.bfloat16 if flags.ANN_BF16_BASE else jnp.float32
+        self.arrays = ShardedIndexArrays(
+            base=jax.device_put(jnp.asarray(base, dtype=base_dt),
+                                shard(P("model", None))),
+            neighbors=jax.device_put(nbrs, shard(P("model", None))),
+            global_ids=jax.device_put(gids, shard(rows)),
+            centroids=jax.device_put(cents, shard(P("model", None))),
+            members=jax.device_put(members, shard(rows)),
+            pca_mean=jax.device_put(mean.astype(np.float32)),
+            pca_comp=jax.device_put(comp.astype(np.float32)),
+            base_norms=jax.device_put(
+                (base.astype(np.float32) ** 2).sum(-1),
+                shard(P("model"))),
+        )
+        return self
+
+    def search(self, queries: jax.Array, k: int, *,
+               ef: Optional[int] = None, mode: str = "while"):
+        step = make_search_step(self.mesh, ef=ef or self.params.ef_search,
+                                k=k, mode=mode)
+        return step(queries, self.arrays)
+
+
+def input_specs_for_search(cfg, batch: int, n_candidates: int,
+                           n_shards: int) -> dict:
+    """ShapeDtypeStructs for the ANN serve_step dry-run (no allocation)."""
+    from repro import flags
+    dim = cfg.pca_dim
+    m = -(-n_candidates // n_shards)
+    n_rows = n_shards * m
+    f32, i32 = jnp.float32, jnp.int32
+    base_dt = jnp.bfloat16 if flags.ANN_BF16_BASE else f32  # P3
+    sd = jax.ShapeDtypeStruct
+    return dict(
+        queries=sd((batch, cfg.dim), f32),
+        arrays=ShardedIndexArrays(
+            base=sd((n_rows, dim), base_dt),
+            neighbors=sd((n_rows, cfg.graph_degree), i32),
+            global_ids=sd((n_rows,), i32),
+            centroids=sd((n_shards * cfg.ep_clusters, dim), f32),
+            members=sd((n_shards * cfg.ep_clusters,), i32),
+            pca_mean=sd((cfg.dim,), f32),
+            pca_comp=sd((cfg.dim, dim), f32),
+            base_norms=sd((n_rows,), f32),
+        ),
+    )

@@ -1,0 +1,45 @@
+"""Entry-point optimization (paper §3.1, knob k).
+
+k-means over the database; each cluster's representative is the *member
+vector* nearest the mean (the paper: "a centroid is the nearest vector to the
+mean vector of the cluster"). At query time the traversal starts from the
+representative of the query's nearest centroid — short search paths without
+touching the graph itself.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import l2_topk, nearest
+from repro.core.kmeans import kmeans
+
+
+@dataclass(frozen=True)
+class EntryPointSelector:
+    centroids: jax.Array     # (k, D) cluster means
+    member_ids: jax.Array    # (k,) int32 database ids of representatives
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    def select(self, queries: jax.Array) -> jax.Array:
+        """(Q, D) -> (Q,) int32 database entry ids."""
+        _, c = nearest(queries, self.centroids)
+        return self.member_ids[c]
+
+
+def fit_entry_points(key: jax.Array, data: jax.Array, k: int,
+                     iters: int = 10) -> EntryPointSelector:
+    """k=1 degenerates to the global medoid (vanilla NSG's navigating node)."""
+    if k == 1:
+        mean = jnp.mean(data.astype(jnp.float32), axis=0, keepdims=True)
+        _, mid = nearest(mean, data)
+        return EntryPointSelector(centroids=mean, member_ids=mid)
+    km = kmeans(key, data, k, iters=iters)
+    _, member = nearest(km.centroids, data)
+    return EntryPointSelector(centroids=km.centroids,
+                              member_ids=member.astype(jnp.int32))

@@ -1,0 +1,29 @@
+"""Brute-force (FlatL2) index — the paper's baseline and the recall oracle."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import l2_topk
+
+
+@dataclass
+class FlatIndex:
+    data: jax.Array
+
+    @property
+    def ntotal(self) -> int:
+        return self.data.shape[0]
+
+    def search(self, queries: jax.Array, k: int, chunk: int = 16384):
+        """Exact (dists, ids); the oracle every other index is scored against."""
+        return l2_topk(queries, self.data, k, chunk=chunk)
+
+
+def recall_at_k(pred_ids: jax.Array, true_ids: jax.Array) -> float:
+    """Paper's Recall@k = |R ∩ R_hat| / k, averaged over queries."""
+    hits = (pred_ids[:, :, None] == true_ids[:, None, :]).any(-1)
+    valid = pred_ids >= 0
+    return float(jnp.mean(jnp.sum(hits & valid, axis=1) / true_ids.shape[1]))

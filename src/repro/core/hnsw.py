@@ -1,0 +1,142 @@
+"""HNSW — paper Fig. 1 baseline ("HNSW32,Flat").
+
+Hierarchical navigable small world graph (Malkov & Yashunin). The build is
+the classic sequential greedy-insert (host numpy, exactly like the original);
+layer-0 search reuses the TPU-native fixed-beam kernel from beam_search with
+the upper layers providing the entry point via greedy descent.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.beam_search import beam_search
+
+
+class HNSWIndex:
+    def __init__(self, m: int = 32, ef_construction: int = 64,
+                 ef_search: int = 64, seed: int = 0):
+        self.m = m
+        self.m0 = 2 * m
+        self.ef_c = ef_construction
+        self.ef_s = ef_search
+        self.rng = np.random.default_rng(seed)
+        self.layers: List[np.ndarray] = []     # [L][n, deg] neighbor ids
+        self.node_level: Optional[np.ndarray] = None
+        self.entry: int = 0
+        self.data: Optional[np.ndarray] = None
+
+    # -- build (host, sequential greedy insert) ---------------------------
+    def fit(self, data: jax.Array):
+        x = np.asarray(data, np.float32)
+        n = x.shape[0]
+        self.data = x
+        ml = 1.0 / math.log(self.m)
+        levels = np.minimum(
+            (-np.log(self.rng.uniform(size=n)) * ml).astype(np.int64), 8)
+        max_level = int(levels.max())
+        self.node_level = levels
+        self.layers = [np.full((n, self.m0 if l == 0 else self.m), -1,
+                               np.int32) for l in range(max_level + 1)]
+        order = np.arange(n)
+        self.entry = int(order[np.argmax(levels)])
+        inserted: List[int] = []
+        for i in order:
+            self._insert(int(i), x, levels[int(i)], inserted)
+            inserted.append(int(i))
+        return self
+
+    def _greedy(self, q: np.ndarray, start: int, layer: np.ndarray) -> int:
+        cur = start
+        cur_d = float(((self.data[cur] - q) ** 2).sum())
+        improved = True
+        while improved:
+            improved = False
+            nbrs = layer[cur]
+            nbrs = nbrs[nbrs >= 0]
+            if len(nbrs) == 0:
+                break
+            d = ((self.data[nbrs] - q) ** 2).sum(1)
+            j = int(np.argmin(d))
+            if d[j] < cur_d:
+                cur, cur_d = int(nbrs[j]), float(d[j])
+                improved = True
+        return cur
+
+    def _search_layer(self, q, entry, layer, ef) -> List[int]:
+        visited = {entry}
+        d0 = float(((self.data[entry] - q) ** 2).sum())
+        cand = [(d0, entry)]
+        best = [(d0, entry)]
+        while cand:
+            cand.sort()
+            d, u = cand.pop(0)
+            if d > max(b[0] for b in best):
+                break
+            for v in layer[u]:
+                if v < 0 or v in visited:
+                    continue
+                visited.add(int(v))
+                dv = float(((self.data[v] - q) ** 2).sum())
+                if len(best) < ef or dv < max(b[0] for b in best):
+                    cand.append((dv, int(v)))
+                    best.append((dv, int(v)))
+                    best.sort()
+                    best[:] = best[:ef]
+        return [u for _, u in best]
+
+    def _insert(self, i: int, x: np.ndarray, level: int,
+                inserted: List[int]):
+        if not inserted:
+            return
+        q = x[i]
+        cur = self.entry
+        top = int(self.node_level[self.entry])
+        for l in range(top, level, -1):
+            if l < len(self.layers):
+                cur = self._greedy(q, cur, self.layers[l])
+        for l in range(min(level, top), -1, -1):
+            cands = self._search_layer(q, cur, self.layers[l], self.ef_c)
+            deg = self.m0 if l == 0 else self.m
+            sel = self._select(q, cands, deg)
+            self.layers[l][i, :len(sel)] = sel
+            for v in sel:                       # reverse edges with prune
+                row = self.layers[l][v]
+                free = np.nonzero(row < 0)[0]
+                if free.size:
+                    row[free[0]] = i
+                else:
+                    ds = ((x[row] - x[v]) ** 2).sum(1)
+                    di = ((x[i] - x[v]) ** 2).sum()
+                    worst = int(np.argmax(ds))
+                    if di < ds[worst]:
+                        row[worst] = i
+            cur = sel[0] if sel else cur
+        if level > int(self.node_level[self.entry]):
+            self.entry = i
+
+    def _select(self, q, cands: List[int], deg: int) -> List[int]:
+        d = ((self.data[cands] - q) ** 2).sum(1)
+        order = np.argsort(d)
+        return [int(cands[j]) for j in order[:deg]]
+
+    # -- search (device, batched layer-0 beam) -----------------------------
+    def search(self, queries: jax.Array, k: int,
+               ef: Optional[int] = None):
+        ef = ef or self.ef_s
+        qn = np.asarray(queries, np.float32)
+        entries = np.empty(qn.shape[0], np.int32)
+        for qi in range(qn.shape[0]):           # greedy upper-layer descent
+            cur = self.entry
+            for l in range(int(self.node_level[self.entry]), 0, -1):
+                if l < len(self.layers):
+                    cur = self._greedy(qn[qi], cur, self.layers[l])
+            entries[qi] = cur
+        d, i, _ = beam_search(queries, jnp.asarray(self.data),
+                              jnp.asarray(self.layers[0]),
+                              jnp.asarray(entries), ef=max(ef, k), k=k)
+        return d, i

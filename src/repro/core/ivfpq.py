@@ -1,0 +1,89 @@
+"""IVF-PQ — paper Fig. 1's "IVF512,PQ32" family: coarse inverted lists with
+PQ-compressed residual codes and ADC scoring inside probed lists.
+
+Memory: N * (M bytes + 4-byte id) + codebooks — the competition's
+memory-constrained regime (their 100M-subset problem, §5.3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import pairwise_sqdist
+from repro.core.kmeans import kmeans
+from repro.core.pq import PQIndex
+
+
+class IVFPQIndex:
+    def __init__(self, n_lists: int = 256, m: int = 16, nprobe: int = 8):
+        self.n_lists = n_lists
+        self.m = m
+        self.nprobe = nprobe
+        self.centroids: Optional[jax.Array] = None
+        self.lists: Optional[jax.Array] = None       # (L, cap) ids
+        self.list_codes: Optional[jax.Array] = None  # (L, cap, M) codes
+        self.pq: Optional[PQIndex] = None
+
+    def fit(self, data: jax.Array, key: Optional[jax.Array] = None,
+            iters: int = 8):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        n, d = data.shape
+        km = kmeans(key, data, self.n_lists, iters=iters)
+        self.centroids = km.centroids
+        # PQ on residuals (classic IVFADC)
+        residual = data - km.centroids[km.assignments]
+        self.pq = PQIndex(m=self.m).fit(residual,
+                                        jax.random.fold_in(key, 1),
+                                        iters=iters)
+        assign = np.asarray(km.assignments)
+        cap = max(int(np.bincount(assign, minlength=self.n_lists).max()), 1)
+        lists = np.full((self.n_lists, cap), -1, np.int32)
+        codes = np.zeros((self.n_lists, cap, self.m), np.int32)
+        pq_codes = np.asarray(self.pq.codes)
+        fill = np.zeros(self.n_lists, np.int64)
+        for i, a in enumerate(assign):
+            lists[a, fill[a]] = i
+            codes[a, fill[a]] = pq_codes[i]
+            fill[a] += 1
+        self.lists = jnp.asarray(lists)
+        self.list_codes = jnp.asarray(codes)
+        return self
+
+    def search(self, queries: jax.Array, k: int):
+        return _ivfpq_search(queries, self.centroids, self.lists,
+                             self.list_codes, self.pq.codebooks, k,
+                             self.nprobe)
+
+    def memory_bytes(self) -> int:
+        return int(self.lists.size * 4 + self.list_codes.size
+                   + self.pq.codebooks.size * 4 + self.centroids.size * 4)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
+def _ivfpq_search(queries, centroids, lists, list_codes, codebooks,
+                  k: int, nprobe: int):
+    qn = queries.shape[0]
+    m, c, dsub = codebooks.shape
+    cd = pairwise_sqdist(queries, centroids)            # (Q, L)
+    cdist, probe = jax.lax.top_k(-cd, nprobe)
+    cand = lists[probe].reshape(qn, -1)                 # (Q, P*cap)
+    codes = list_codes[probe].reshape(qn, -1, m)        # (Q, P*cap, M)
+    # residual ADC LUT per probed centroid: r = q - centroid
+    res = queries[:, None, :] - centroids[probe]        # (Q, P, D)
+    rs = res.reshape(qn, nprobe, m, dsub)
+    diff = rs[:, :, :, None, :] - codebooks[None, None]  # (Q,P,M,C,dsub)
+    lut = jnp.sum(diff * diff, axis=-1)                 # (Q, P, M, C)
+    cap = lists.shape[1]
+    probe_of = jnp.repeat(jnp.arange(nprobe), cap)[None, :, None]
+    lut_g = jnp.take_along_axis(
+        lut[:, :, None, :, :].repeat(cap, 2).reshape(qn, nprobe * cap, m, c),
+        codes[..., None], axis=3)[..., 0]
+    del probe_of
+    dist = jnp.sum(lut_g, axis=-1)
+    dist = jnp.where(cand >= 0, dist, jnp.inf)
+    nd, pos = jax.lax.top_k(-dist, k)
+    return -nd, jnp.take_along_axis(cand, pos, axis=1)

@@ -1,0 +1,47 @@
+"""Exact k-NN graph construction (build-time substrate for NSG + AntiHub).
+
+O(N^2 D) through the chunked streaming top-k; on the production mesh the row
+blocks shard across (pod, data) so build cost scales with chip count
+(see core/distributed.py: build_knn_sharded).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import l2_topk
+
+
+@functools.partial(jax.jit, static_argnames=("k", "query_chunk", "db_chunk"))
+def knn_graph(data: jax.Array, k: int, query_chunk: int = 4096,
+              db_chunk: int = 16384):
+    """(N, k) int32 neighbor ids + (N, k) f32 sq-dists, self excluded."""
+    n = data.shape[0]
+    kk = min(k + 1, n)
+    nq = -(-n // query_chunk)
+    pad = nq * query_chunk - n
+    qs = jnp.pad(data, ((0, pad), (0, 0))).reshape(nq, query_chunk, -1)
+    row0 = jnp.arange(nq) * query_chunk
+
+    def step(_, inp):
+        q, r0 = inp
+        d, i = l2_topk(q, data, kk, chunk=db_chunk)
+        rows = r0 + jnp.arange(query_chunk)[:, None]
+        is_self = i == rows
+        # push self-matches to the back, then drop the last column
+        d = jnp.where(is_self, jnp.inf, d)
+        order = jnp.argsort(d, axis=1)
+        d = jnp.take_along_axis(d, order, axis=1)[:, : kk - 1]
+        i = jnp.take_along_axis(i, order, axis=1)[:, : kk - 1]
+        return None, (d, i)
+
+    _, (dists, ids) = jax.lax.scan(step, None, (qs, row0))
+    dists = dists.reshape(nq * query_chunk, kk - 1)[:n]
+    ids = ids.reshape(nq * query_chunk, kk - 1)[:n]
+    if kk - 1 < k:  # degenerate tiny-N case: pad out to k
+        padw = k - (kk - 1)
+        dists = jnp.pad(dists, ((0, 0), (0, padw)), constant_values=jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, padw)), constant_values=-1)
+    return dists, ids

@@ -1,0 +1,122 @@
+"""The paper's end-to-end pipeline (Fig. 2): AntiHub subsample -> PCA ->
+NSG build -> k-means entry points; search = project -> select EP -> beam.
+
+``IndexParams`` carries exactly the knobs the black-box tuner drives:
+D (pca_dim), alpha (antihub_keep), k (ep_clusters) + ef_search.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ANNConfig
+from repro.core import antihub as antihub_mod
+from repro.core.beam_search import beam_search
+from repro.core.entry_points import EntryPointSelector, fit_entry_points
+from repro.core.knn_graph import knn_graph
+from repro.core.nsg import NSGGraph, build_nsg
+from repro.core.pca import PCA, fit_pca
+
+
+@dataclass(frozen=True)
+class IndexParams:
+    pca_dim: int                  # D   (== input dim -> PCA disabled)
+    antihub_keep: float = 1.0     # alpha (1.0 -> subsampling disabled)
+    ep_clusters: int = 1          # k    (1 -> medoid, vanilla NSG)
+    ef_search: int = 64
+    graph_degree: int = 32
+    build_knn_k: int = 32
+    build_candidates: int = 64
+
+    @staticmethod
+    def from_config(cfg: ANNConfig) -> "IndexParams":
+        return IndexParams(
+            pca_dim=cfg.pca_dim, antihub_keep=cfg.antihub_keep,
+            ep_clusters=cfg.ep_clusters, ef_search=cfg.ef_search,
+            graph_degree=cfg.graph_degree, build_knn_k=cfg.build_knn_k,
+            build_candidates=cfg.build_candidates)
+
+
+class TunedGraphIndex:
+    """antihub ∘ pca ∘ nsg ∘ entry-points, searchable. Fit is build-time."""
+
+    def __init__(self, params: IndexParams):
+        self.params = params
+        self.kept_idx: Optional[jax.Array] = None    # internal -> original id
+        self.pca: Optional[PCA] = None
+        self.base: Optional[jax.Array] = None        # projected kept vectors
+        self.graph: Optional[NSGGraph] = None
+        self.eps: Optional[EntryPointSelector] = None
+        self.build_seconds: float = 0.0
+
+    # -- build ------------------------------------------------------------
+    def fit(self, data: jax.Array, key: Optional[jax.Array] = None):
+        t0 = time.perf_counter()
+        key = key if key is not None else jax.random.PRNGKey(0)
+        p = self.params
+        n, d0 = data.shape
+
+        if p.antihub_keep < 1.0:
+            self.kept_idx = antihub_mod.antihub_keep_indices(
+                data, p.antihub_keep, k=10)
+            sub = data[self.kept_idx]
+        else:
+            self.kept_idx = jnp.arange(n, dtype=jnp.int32)
+            sub = data
+
+        if p.pca_dim < d0:
+            self.pca = fit_pca(sub, p.pca_dim)
+            base = self.pca.transform(sub)
+        else:
+            self.pca = None
+            base = sub
+        self.base = base
+
+        _, knn_ids = knn_graph(base, p.build_knn_k)
+        self.graph = build_nsg(base, knn_ids, degree=p.graph_degree,
+                               n_candidates=p.build_candidates)
+        self.eps = fit_entry_points(key, base, p.ep_clusters)
+        self.build_seconds = time.perf_counter() - t0
+        return self
+
+    # -- search -----------------------------------------------------------
+    def project(self, queries: jax.Array) -> jax.Array:
+        return self.pca.transform(queries) if self.pca is not None else queries
+
+    def search(self, queries: jax.Array, k: int, *,
+               ef: Optional[int] = None, mode: str = "while"):
+        """Returns (dists (Q,k) in projected space, original ids (Q,k))."""
+        assert self.graph is not None, "fit() first"
+        ef = ef or self.params.ef_search
+        q = self.project(queries)
+        entries = self.eps.select(q)
+        d, i, hops = beam_search(q, self.base, self.graph.neighbors, entries,
+                                 ef=max(ef, k), k=k, mode=mode)
+        orig = jnp.where(i >= 0, self.kept_idx[jnp.maximum(i, 0)], -1)
+        return d, orig
+
+    @property
+    def ntotal(self) -> int:
+        return 0 if self.base is None else self.base.shape[0]
+
+    def memory_bytes(self) -> int:
+        """Index footprint: vectors + graph + entry-point structures."""
+        total = self.base.size * self.base.dtype.itemsize
+        total += self.graph.neighbors.size * 4
+        total += self.kept_idx.size * 4
+        if self.pca is not None:
+            total += (self.pca.components.size + self.pca.mean.size) * 4
+        total += (self.eps.centroids.size * 4 + self.eps.member_ids.size * 4)
+        return int(total)
+
+
+def build_vanilla_nsg(data: jax.Array, *, degree: int = 32,
+                      ef_search: int = 64, **kw) -> TunedGraphIndex:
+    """Paper's baseline: no PCA, no subsampling, medoid entry point."""
+    p = IndexParams(pca_dim=data.shape[1], antihub_keep=1.0, ep_clusters=1,
+                    ef_search=ef_search, graph_degree=degree, **kw)
+    return TunedGraphIndex(p).fit(data)

@@ -1,0 +1,6 @@
+from repro.core.tuning.objective import AnnObjective, default_space  # noqa: F401
+from repro.core.tuning.samplers import RandomSampler, TPESampler  # noqa: F401
+from repro.core.tuning.space import (  # noqa: F401
+    Categorical, Float, Int, SearchSpace,
+)
+from repro.core.tuning.study import Study, Trial  # noqa: F401

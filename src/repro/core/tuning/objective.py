@@ -1,0 +1,129 @@
+"""The ANN tuning objective (paper Eq. 1-3): measure QPS + Recall@k for a
+parameter assignment.
+
+Beyond-paper improvement (addresses their §5.3 limitation — "we have to
+rebuild the index every time D and alpha change"): builds are cached by the
+*structural* sub-key (pca_dim, antihub_keep, graph params). Trials that only
+move `ep_clusters` or `ef_search` re-fit entry points / re-run search on the
+cached graph, which is orders of magnitude cheaper. Entry-point selectors are
+additionally cached per (structure, k).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.entry_points import fit_entry_points
+from repro.core.flat import FlatIndex, recall_at_k
+from repro.core.pipeline import IndexParams, TunedGraphIndex
+from repro.core.tuning.space import Float, Int, SearchSpace
+from repro.core.tuning.study import Trial
+
+
+def default_space(dim: int, n: int) -> SearchSpace:
+    """The paper's knobs: D, alpha, k (+ ef, which Faiss exposes too)."""
+    return (SearchSpace()
+            .add("pca_dim", Int(max(8, dim // 4), dim))
+            .add("antihub_keep", Float(0.7, 1.0))
+            .add("ep_clusters", Int(1, max(2, min(256, n // 20)), log=True))
+            .add("ef_search", Int(16, 256, log=True)))
+
+
+@dataclass
+class EvalResult:
+    recall: float
+    qps: float
+    build_seconds: float
+    mem_bytes: int
+    cached_build: bool
+
+
+class AnnObjective:
+    """Callable objective with build caching + QPS measurement.
+
+    qps_repeats: the paper measures "average QPS measured ten times" — we
+    default to 5 timed repeats after 1 warmup (CPU jit).
+    """
+
+    def __init__(self, data, queries, k: int = 10,
+                 base_params: Optional[IndexParams] = None,
+                 recall_floor: float = 0.9, qps_repeats: int = 5,
+                 mem_limit_bytes: Optional[int] = None, seed: int = 0):
+        self.data = data
+        self.queries = queries
+        self.k = k
+        self.recall_floor = recall_floor
+        self.qps_repeats = qps_repeats
+        self.mem_limit = mem_limit_bytes
+        self.key = jax.random.PRNGKey(seed)
+        self.base = base_params or IndexParams(pca_dim=data.shape[1])
+        _, self.true_i = FlatIndex(data).search(queries, k)
+        self._build_cache: Dict[tuple, TunedGraphIndex] = {}
+        self._ep_cache: Dict[tuple, object] = {}
+        self.eval_log: list = []
+
+    # -- internals ---------------------------------------------------------
+    def _structural_key(self, p: IndexParams) -> tuple:
+        return (p.pca_dim, round(p.antihub_keep, 4), p.graph_degree,
+                p.build_knn_k, p.build_candidates)
+
+    def _get_index(self, p: IndexParams) -> Tuple[TunedGraphIndex, bool]:
+        skey = self._structural_key(p)
+        if skey in self._build_cache:
+            idx = self._build_cache[skey]
+            cached = True
+        else:
+            idx = TunedGraphIndex(replace(p, ep_clusters=1)).fit(
+                self.data, self.key)
+            self._build_cache[skey] = idx
+            cached = False
+        ekey = skey + (p.ep_clusters,)
+        if ekey not in self._ep_cache:
+            self._ep_cache[ekey] = fit_entry_points(
+                self.key, idx.base, p.ep_clusters)
+        idx.eps = self._ep_cache[ekey]
+        return idx, cached
+
+    def evaluate(self, params: Dict) -> EvalResult:
+        p = replace(self.base, **params)
+        t0 = time.perf_counter()
+        idx, cached = self._get_index(p)
+        build_s = time.perf_counter() - t0
+        ef = max(p.ef_search, self.k)
+        d, i = idx.search(self.queries, self.k, ef=ef)      # warmup+compile
+        jax.block_until_ready(d)
+        times = []
+        for _ in range(self.qps_repeats):
+            t1 = time.perf_counter()
+            d, i = idx.search(self.queries, self.k, ef=ef)
+            jax.block_until_ready(d)
+            times.append(time.perf_counter() - t1)
+        qps = self.queries.shape[0] / float(np.median(times))
+        rec = recall_at_k(i, self.true_i)
+        res = EvalResult(recall=rec, qps=qps, build_seconds=build_s,
+                         mem_bytes=idx.memory_bytes(), cached_build=cached)
+        self.eval_log.append((dict(params), res))
+        return res
+
+    # -- objective forms (paper Eqs. 1-2 and 3) ------------------------------
+    def single_objective(self, trial: Trial) -> dict:
+        """maximize QPS  s.t.  Recall@k >= floor (and optional memory cap)."""
+        r = self.evaluate(trial.params)
+        cons = [self.recall_floor - r.recall]
+        if self.mem_limit:
+            cons.append((r.mem_bytes - self.mem_limit) / self.mem_limit)
+        trial.user_attrs["result"] = r
+        return {"values": r.qps, "constraints": cons}
+
+    def multi_objective(self, trial: Trial) -> dict:
+        """maximize (QPS, Recall@k)."""
+        r = self.evaluate(trial.params)
+        cons = []
+        if self.mem_limit:
+            cons.append((r.mem_bytes - self.mem_limit) / self.mem_limit)
+        trial.user_attrs["result"] = r
+        return {"values": (r.qps, r.recall), "constraints": cons}

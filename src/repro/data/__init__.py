@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    clustered_vectors, lm_batch, queries_like, random_graph, recsys_batch,
+)

@@ -1,0 +1,90 @@
+"""Synthetic datasets for every family (the container is offline).
+
+`clustered_vectors` mimics LAION CLIP embeddings for the paper's workload:
+a Gaussian mixture with skewed cluster weights + anisotropic spectrum, which
+produces (a) a decaying PCA spectrum (so the D knob has headroom) and
+(b) genuine hub structure (so AntiHub removal has signal).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def clustered_vectors(key: jax.Array, n: int, dim: int,
+                      n_clusters: int = 64, spectrum_decay: float = 0.95,
+                      dtype=jnp.float32) -> jax.Array:
+    k_c, k_w, k_a, k_n, k_s = jax.random.split(key, 5)
+    # anisotropic per-dim scales -> decaying PCA spectrum (applies to the
+    # between-cluster structure too, like real embedding spectra)
+    scales = spectrum_decay ** jnp.arange(dim, dtype=jnp.float32)
+    # center scale 1.0 ~ moderate cluster overlap: the kNN graph is navigable
+    # (like real CLIP embeddings) yet entry-point tuning still has headroom.
+    centers = jax.random.normal(k_c, (n_clusters, dim)) * scales[None, :]
+    # Zipf-ish cluster weights -> density skew -> hubs
+    w = 1.0 / (1.0 + jnp.arange(n_clusters, dtype=jnp.float32))
+    w = w / jnp.sum(w)
+    assign = jax.random.choice(k_a, n_clusters, (n,), p=w)
+    noise = jax.random.normal(k_n, (n, dim)) * scales[None, :]
+    x = centers[assign] + noise
+    return x.astype(dtype)
+
+
+def queries_like(key: jax.Array, data: jax.Array, n_queries: int,
+                 jitter: float = 0.05) -> jax.Array:
+    """In-distribution queries: perturbed database points (paper §5.2's
+    'consistent query distribution' assumption)."""
+    k_i, k_n = jax.random.split(key)
+    idx = jax.random.randint(k_i, (n_queries,), 0, data.shape[0])
+    noise = jax.random.normal(k_n, (n_queries, data.shape[1]), data.dtype)
+    return data[idx] + jitter * noise
+
+
+def lm_batch(key: jax.Array, batch: int, seq_len: int, vocab: int):
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq_len), 0, vocab, jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def recsys_batch(key: jax.Array, batch: int, cfg) -> dict:
+    """Categorical ids per table (+ dense features / behaviour seqs)."""
+    keys = jax.random.split(key, cfg.n_sparse + 3)
+    out = {}
+    multi_hot = cfg.multi_hot or (1,) * cfg.n_sparse
+    sparse = []
+    for t, (vocab, bag) in enumerate(zip(cfg.table_vocabs, multi_hot)):
+        sparse.append(jax.random.randint(keys[t], (batch, bag), 0, vocab,
+                                         jnp.int32))
+    out["sparse_ids"] = sparse
+    if cfg.n_dense:
+        out["dense"] = jax.random.normal(keys[-3], (batch, cfg.n_dense))
+    if cfg.seq_len and cfg.interaction in ("self-attn-seq", "target-attn"):
+        out["history"] = jax.random.randint(
+            keys[-2], (batch, cfg.seq_len), 0, cfg.table_vocabs[0], jnp.int32)
+        out["history_len"] = jax.random.randint(
+            keys[-1], (batch,), 1, cfg.seq_len + 1, jnp.int32)
+        out["target"] = jax.random.randint(
+            keys[-1], (batch,), 0, cfg.table_vocabs[0], jnp.int32)
+    out["label"] = jax.random.bernoulli(keys[-1], 0.3, (batch,)).astype(
+        jnp.float32)
+    return out
+
+
+def random_graph(key: jax.Array, n_nodes: int, n_edges: int,
+                 d_feat: int = 0, positions: bool = False):
+    """Random directed graph (edge_index src->dst) with optional features."""
+    k_e, k_f, k_p = jax.random.split(key, 3)
+    src = jax.random.randint(k_e, (n_edges,), 0, n_nodes, jnp.int32)
+    dst = (src + 1 + jax.random.randint(
+        jax.random.fold_in(k_e, 1), (n_edges,), 0, n_nodes - 1,
+        jnp.int32)) % n_nodes
+    g = {"src": src, "dst": dst, "n_nodes": n_nodes}
+    if d_feat:
+        g["x"] = jax.random.normal(k_f, (n_nodes, d_feat))
+    if positions:
+        g["pos"] = jax.random.normal(k_p, (n_nodes, 3)) * 2.0
+    return g

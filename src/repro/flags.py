@@ -1,0 +1,70 @@
+"""Optimization toggles for A/B roofline comparisons (§Perf).
+
+Each beyond-baseline optimization is individually switchable so the
+hypothesis -> change -> measure loop can isolate its effect. The dry-run CLI
+exposes `--baseline` (all off) and `--opt` (all on).
+"""
+from __future__ import annotations
+
+import os
+
+
+def _env(name: str, default: bool) -> bool:
+    v = os.environ.get(name)
+    if v is None:
+        return default
+    return v not in ("0", "false", "False", "")
+
+
+# P1: explicit sharding constraints on the MoE dispatch path (kills the SPMD
+#     "involuntary full rematerialization" resharding thrash).
+MOE_SHARD_CONSTRAINTS = _env("REPRO_MOE_SHARD", False)
+
+# P2: sharded-vocab-safe cross entropy (never gathers (tokens, V) logits).
+SHARDED_CE = _env("REPRO_SHARDED_CE", False)
+
+# P3: bf16 database vectors in the ANN sharded search (halves the gather
+#     traffic of the beam's dominant memory term).
+ANN_BF16_BASE = _env("REPRO_ANN_BF16", False)
+
+# P4: beam iteration budget 2*ef instead of 4*ef (empirically converged —
+#     see tests/test_perf_opts.py recall check).
+ANN_TIGHT_BUDGET = _env("REPRO_ANN_TIGHT", False)
+
+
+_ALL = ["MOE_SHARD_CONSTRAINTS", "SHARDED_CE", "ANN_BF16_BASE",
+        "ANN_TIGHT_BUDGET", "GRAD_SHARD_CONSTRAINTS", "HEAD_TP_ATTENTION",
+        "LM_FSDP"]
+
+
+def enable_all():
+    g = globals()
+    for name in _ALL:
+        g[name] = True
+
+
+def disable_all():
+    g = globals()
+    for name in _ALL:
+        g[name] = False
+
+
+# P5: pin the grad-accumulator (and per-microbatch grads) to the params'
+#     sharding — otherwise XLA replicates the accumulator and all-gathers
+#     every weight gradient every microbatch.
+GRAD_SHARD_CONSTRAINTS = _env("REPRO_GRAD_SHARD", False)
+
+# P6: head-TP attention when n_heads divides the model axis; sequence
+#     parallelism only as the fallback (unconditional seq-sharding made XLA
+#     all-gather FFN weights instead of activations).
+HEAD_TP_ATTENTION = _env("REPRO_HEAD_TP", False)
+
+# P7: FSDP — shard big LM params (and their moments) over the DP axes too;
+#     XLA all-gathers per scanned layer. Capacity fix for >=100B configs.
+LM_FSDP = _env("REPRO_FSDP", False)
+
+# P8: precompute |x|^2 per database row at build time; the beam's distance
+#     eval becomes qn + norms[ids] - 2 rows.q — removes the gather-sized
+#     elementwise square traffic from every expansion.
+ANN_PRENORM = _env("REPRO_ANN_PRENORM", False)
+_ALL.append("ANN_PRENORM")

@@ -1,0 +1,17 @@
+"""Backend dispatch for EmbeddingBag (recsys sparse lookup hot path)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def embedding_bag(table, ids, weights=None, combiner: str = "sum",
+                  backend: str = "jnp", **kw):
+    if backend == "jnp":
+        return embedding_bag_ref(table, ids, weights, combiner)
+    if backend == "pallas":
+        kw.setdefault("interpret", jax.default_backend() != "tpu")
+        return embedding_bag_pallas(table, ids, weights, combiner, **kw)
+    raise ValueError(f"unknown backend {backend!r}")

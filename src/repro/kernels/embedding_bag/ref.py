@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: take + masked weighted reduce."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("combiner",))
+def embedding_bag_ref(table, ids, weights=None, combiner: str = "sum"):
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    w = jnp.where(ids >= 0, weights, 0.0).astype(jnp.float32)
+    rows = table[jnp.maximum(ids, 0)].astype(jnp.float32)   # (B, L, D)
+    out = jnp.einsum("bl,bld->bd", w, rows)
+    if combiner == "mean":
+        out = out / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+    return out

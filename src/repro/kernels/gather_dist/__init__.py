@@ -1,0 +1,1 @@
+from repro.kernels.gather_dist.ops import gather_dist  # noqa: F401

@@ -1,0 +1,17 @@
+"""Backend dispatch for gathered neighbor distances (graph-search hot path)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gather_dist.gather_dist import gather_dist_pallas
+from repro.kernels.gather_dist.ref import gather_dist_ref
+
+
+def gather_dist(queries: jax.Array, db: jax.Array, ids: jax.Array,
+                backend: str = "jnp", **kw) -> jax.Array:
+    if backend == "jnp":
+        return gather_dist_ref(queries, db, ids)
+    if backend == "pallas":
+        kw.setdefault("interpret", jax.default_backend() != "tpu")
+        return gather_dist_pallas(queries, db, ids, **kw)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: gather rows, squared-L2 against each query."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def gather_dist_ref(queries: jax.Array, db: jax.Array,
+                    ids: jax.Array) -> jax.Array:
+    rows = db[jnp.maximum(ids, 0)].astype(jnp.float32)      # (B, R, D)
+    q = queries.astype(jnp.float32)[:, None, :]
+    d = jnp.sum((rows - q) ** 2, axis=-1)
+    return jnp.where(ids >= 0, d, jnp.inf)

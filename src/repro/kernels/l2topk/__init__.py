@@ -1,0 +1,1 @@
+from repro.kernels.l2topk.ops import l2_topk  # noqa: F401

@@ -1,0 +1,22 @@
+"""Backend dispatch for fused L2+top-k: `pallas` (TPU target; interpret on
+CPU) or `jnp` (XLA chunked reference). Kernel consumers call this."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.l2topk.l2topk import l2_topk_pallas
+from repro.kernels.l2topk.ref import l2_topk_ref
+
+
+def l2_topk(queries: jax.Array, database: jax.Array, k: int,
+            backend: str = "jnp", **kw):
+    if backend == "jnp":
+        kw.pop("interpret", None)
+        kw.pop("block_q", None)
+        kw.pop("block_n", None)
+        return l2_topk_ref(queries, database, k, **kw)
+    if backend == "pallas":
+        kw.setdefault("interpret", jax.default_backend() != "tpu")
+        kw.pop("chunk", None)
+        return l2_topk_pallas(queries, database, k, **kw)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,4 @@
+"""Pure-jnp oracle for the l2topk kernel: the chunked streaming top-k from
+core.distances (itself validated against naive O(QN) numpy in tests)."""
+from repro.core.distances import l2_topk as l2_topk_ref  # noqa: F401
+from repro.core.distances import pairwise_sqdist  # noqa: F401

@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax pins the device count at first init.
+# The 512 placeholder host devices exist ONLY in this process.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.analysis.roofline import analyze, hbm_fit  # noqa: E402
+from repro.configs import get_arch, iter_cells        # noqa: E402
+from repro.launch.mesh import make_production_mesh    # noqa: E402
+from repro.launch.specs import build_cell             # noqa: E402
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, lower + compile the real step
+function against the production meshes:
+
+    single-pod: (16, 16)    = 256 chips   ("data", "model")
+    multi-pod : (2, 16, 16) = 512 chips   ("pod", "data", "model")
+
+and record memory_analysis / cost_analysis / collective schedule for
+EXPERIMENTS.md §Dry-run + §Roofline. A sharding mismatch, compile OOM, or
+unsupported collective here is a bug in the system.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k \
+        --mesh single multi
+    python -m repro.launch.dryrun --all --out benchmarks/results/dryrun
+"""
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             force: bool = False) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    out_path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    spec = get_arch(arch)
+    reason = spec.skip_reason(shape)
+    rec: dict
+    if reason:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "skipped", "reason": reason}
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.perf_counter()
+        try:
+            cell = build_cell(arch, shape, mesh)
+            lowered = cell.fn.lower(*cell.args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+            rep = analyze(compiled, arch=arch, shape=shape,
+                          mesh_desc=mesh_name, n_devices=mesh.size,
+                          model_flops=cell.model_flops, notes=cell.notes)
+            mem = compiled.memory_analysis()
+            rec = {
+                "status": "ok", "kind": cell.kind,
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "hbm_fit_16g": hbm_fit(rep),
+                "memory": {
+                    "argument_bytes": int(mem.argument_size_in_bytes),
+                    "output_bytes": int(mem.output_size_in_bytes),
+                    "temp_bytes": int(mem.temp_size_in_bytes),
+                    "alias_bytes": int(mem.alias_size_in_bytes),
+                },
+                **rep.to_dict(),
+            }
+        except Exception as e:                      # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", nargs="+", default=["single", "multi"],
+                    choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--include-ann", action="store_true",
+                    help="also run the paper's own ANN workload cells")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable all beyond-baseline optimizations (flags.py)")
+    args = ap.parse_args()
+    if args.opt:
+        from repro import flags
+        flags.enable_all()
+
+    cells = []
+    for arch, shape, _ in iter_cells(include_ann=args.include_ann or
+                                     args.arch == "ann-laion"):
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape != args.shape:
+            continue
+        cells.append((arch, shape))
+    if not cells:
+        raise SystemExit("no cells selected")
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape in cells:
+        for mesh in args.mesh:
+            rec = run_cell(arch, shape, mesh == "multi", args.out,
+                           args.force)
+            status = rec["status"]
+            if status == "ok":
+                n_ok += 1
+                print(f"[OK]   {arch:22s} {shape:15s} {rec['mesh']:8s} "
+                      f"compile={rec['compile_s']:6.1f}s "
+                      f"mem={rec['memory']['argument_bytes']/1e9:6.2f}+"
+                      f"{rec['memory']['temp_bytes']/1e9:5.2f}GB "
+                      f"bottleneck={rec['bottleneck']}", flush=True)
+                ma = rec["memory"]
+                print(compiled_summary(rec), flush=True)
+            elif status == "skipped":
+                n_skip += 1
+                print(f"[SKIP] {arch:22s} {shape:15s} {rec['mesh']:8s} "
+                      f"{rec['reason'][:60]}", flush=True)
+            else:
+                n_err += 1
+                print(f"[ERR]  {arch:22s} {shape:15s} {rec['mesh']:8s} "
+                      f"{rec['error'][:120]}", flush=True)
+    print(f"done: ok={n_ok} skip={n_skip} err={n_err}")
+    raise SystemExit(1 if n_err else 0)
+
+
+def compiled_summary(rec: dict) -> str:
+    return ("       terms: compute={:.2e}s memory={:.2e}s "
+            "collective={:.2e}s useful={:.2f}".format(
+                rec["compute_s"], rec["memory_s"], rec["collective_s"],
+                rec["useful_ratio"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Black-box tuning launcher — the paper's §3.2 workflow as a CLI.
+
+    PYTHONPATH=src python -m repro.launch.tune --n 2000 --dim 64 \
+        --trials 15 --mode multi
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.core import FlatIndex, IndexParams
+from repro.core.tuning import AnnObjective, Study, TPESampler, default_space
+from repro.data import clustered_vectors, queries_like
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--queries", type=int, default=128)
+    ap.add_argument("--trials", type=int, default=12)
+    ap.add_argument("--mode", choices=["single", "multi"], default="multi")
+    ap.add_argument("--recall-floor", type=float, default=0.9)
+    ap.add_argument("--timeout", type=float, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    data = clustered_vectors(key, args.n, args.dim, n_clusters=32)
+    queries = queries_like(jax.random.PRNGKey(1), data, args.queries)
+    base = IndexParams(pca_dim=args.dim, graph_degree=16, build_knn_k=16,
+                       build_candidates=32, ef_search=64)
+    obj = AnnObjective(data, queries, k=10, base_params=base,
+                       recall_floor=args.recall_floor, qps_repeats=3)
+    space = default_space(args.dim, args.n)
+
+    if args.mode == "single":
+        study = Study(space, TPESampler(seed=0, n_startup=5))
+        study.optimize(obj.single_objective, n_trials=args.trials,
+                       timeout=args.timeout)
+        best = study.best_trial
+        results = [best]
+    else:
+        study = Study(space, TPESampler(seed=0, n_startup=5),
+                      n_objectives=2)
+        study.optimize(obj.multi_objective, n_trials=args.trials,
+                       timeout=args.timeout)
+        results = study.pareto_front()
+
+    print(f"\n{'params':60s} recall   qps")
+    for t in sorted(results, key=lambda t: -t.values[0]):
+        r = t.user_attrs["result"]
+        print(f"{str(t.params):60s} {r.recall:.4f}  {r.qps:.0f}")
+    cached = sum(1 for _, r in obj.eval_log if r.cached_build)
+    print(f"\n{len(obj.eval_log)} evals, {cached} reused cached builds "
+          f"(the §5.3 rebuild cost fix)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([{"params": t.params, "values": t.values}
+                       for t in results], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,389 @@
+"""Shared transformer building blocks (pure pytree params, init/apply style).
+
+Covers every attention variant the assigned LM configs need: GQA with
+optional qk-norm (qwen3) and QKV bias (qwen2), and MLA latent attention
+(deepseek-v2). All matmuls run in the config dtype (bf16 on TPU) with f32
+softmax/norm accumulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def dense_init(key, d_in, d_out, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- rmsnorm
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(
+        x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope_cache(positions: jax.Array, head_dim: int, theta: float):
+    """positions (...,) -> (cos, sin) of shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def sdpa(q, k, v, *, causal: bool, q_offset=0, kv_len_valid=None):
+    """q (B,Sq,H,hd), k/v (B,Skv,KV,hd); GQA by head-group einsum.
+
+    Softmax in f32. causal uses absolute positions (q_offset for decode).
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    qg = q.reshape(b, sq, kv, groups, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    skv = k.shape[1]
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(skv)
+        mask = kpos[None, :] <= qpos[:, None]             # (Sq, Skv)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if kv_len_valid is not None:                          # ragged kv (decode)
+        valid = jnp.arange(skv)[None, :] < kv_len_valid[:, None]
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)  # hd_v != hd_q (MLA)
+
+
+def chunked_sdpa(q, k, v, *, causal: bool, block_kv: int = 1024):
+    """Flash-style attention: scan over KV blocks with online softmax.
+
+    Never materializes the (Sq, Skv) score matrix — the per-step transient is
+    (B, H, Sq, block_kv) f32. KV heads are repeated to H *inside* the block
+    (GQA expansion costs block-sized memory only). This is the memory-roofline
+    fix that makes the 32k-context cells fit (EXPERIMENTS.md §Perf).
+    """
+    from repro import flags
+    from repro.distributed import sharding as SH
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    mesh = SH._ACTIVE_MESH
+    ms = mesh.shape["model"] if mesh is not None else 0
+    if flags.HEAD_TP_ATTENTION and ms and h % ms == 0:
+        # P6: head-TP — no activation resharding at the FFN boundary
+        dp = SH.batch_axes(mesh)
+        q = SH.maybe_shard(q, dp, None, "model", None)
+        k = SH.shard_batch_seq(k, 0, None)
+        v = SH.shard_batch_seq(v, 0, None)
+    else:
+        # sequence-parallel attention: q seq-sharded on `model`, K/V
+        # replicated across it. Head-count agnostic fallback (12H/2KV GQA
+        # can't head-shard a 16-way axis).
+        q = SH.shard_batch_seq(q, 0, 1)
+        k = SH.shard_batch_seq(k, 0, None)
+        v = SH.shard_batch_seq(v, 0, None)
+    nblk = -(-skv // block_kv)
+    pad = nblk * block_kv - skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = kp.reshape(b, nblk, block_kv, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(b, nblk, block_kv, kvh, hd).transpose(1, 0, 2, 3, 4)
+
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    qpos = jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, start = inp
+        ke = jnp.repeat(kblk, g, axis=2).astype(jnp.float32)  # (B,bkv,H,hd)
+        ve = jnp.repeat(vblk, g, axis=2).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, ke)             # (B,H,Sq,bkv)
+        kpos = start + jnp.arange(block_kv)
+        valid = kpos[None, :] < skv
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(valid[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l = l * scale + jnp.sum(p, axis=-1)
+        acc = acc * scale[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, ve)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    starts = jnp.arange(nblk) * block_kv
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)          # (B,Sq,H,hd)
+
+
+# attention dispatch: chunk when the quadratic term would dominate memory
+CHUNK_THRESHOLD = 2048
+
+
+def attention(q, k, v, *, causal: bool, block_kv: int = 1024):
+    if q.shape[1] >= CHUNK_THRESHOLD and q.shape[-1] == v.shape[-1]:
+        return chunked_sdpa(q, k, v, causal=causal, block_kv=block_kv)
+    return sdpa(q, k, v, causal=causal)
+
+
+# ------------------------------------------------------------ GQA attention
+def gqa_init(key, cfg) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p: Params = {
+        "wq": dense_init(ks[0], d, h * hd, dt),
+        "wk": dense_init(ks[1], d, kvh * hd, dt),
+        "wv": dense_init(ks[2], d, kvh * hd, dt),
+        "wo": dense_init(ks[3], h * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kvh * hd,), dt)
+        p["bv"] = jnp.zeros((kvh * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def gqa_qkv(p: Params, cfg, x: jax.Array, positions: jax.Array):
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    cos, sin = rope_cache(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_apply(p: Params, cfg, x, positions, *, causal=True):
+    q, k, v = gqa_qkv(p, cfg, x, positions)
+    o = attention(q, k, v, causal=causal)
+    return o.reshape(x.shape[0], x.shape[1], -1) @ p["wo"]
+
+
+def gqa_decode(p: Params, cfg, x, pos, cache: Tuple[jax.Array, jax.Array],
+               kv_valid):
+    """x (B,1,d); cache (k,v) each (B, Smax, KV, hd); pos (B,) absolute."""
+    q, k_new, v_new = gqa_qkv(p, cfg, x, pos[:, None])
+    ck, cv = cache
+    bidx = jnp.arange(x.shape[0])
+    ck = ck.at[bidx, pos].set(k_new[:, 0])
+    cv = cv.at[bidx, pos].set(v_new[:, 0])
+    o = sdpa(q, ck, cv, causal=False, kv_len_valid=kv_valid)
+    out = o.reshape(x.shape[0], 1, -1) @ p["wo"]
+    return out, (ck, cv)
+
+
+# ------------------------------------------------------------ MLA attention
+def mla_init(key, cfg) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    h = cfg.n_heads
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p: Params = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], d, cfg.q_lora_rank, dt)
+        p["q_a_norm"] = jnp.ones((cfg.q_lora_rank,), dt)
+        p["wq_b"] = dense_init(ks[1], cfg.q_lora_rank, h * qd, dt)
+    else:
+        p["wq"] = dense_init(ks[0], d, h * qd, dt)
+    p["wkv_a"] = dense_init(ks[2], d, cfg.kv_lora_rank
+                            + cfg.qk_rope_head_dim, dt)
+    p["kv_a_norm"] = jnp.ones((cfg.kv_lora_rank,), dt)
+    p["wkv_b"] = dense_init(
+        ks[3], cfg.kv_lora_rank,
+        h * (cfg.qk_nope_head_dim + cfg.v_head_dim), dt)
+    p["wo"] = dense_init(ks[4], h * cfg.v_head_dim, d, dt)
+    return p
+
+
+def _mla_q(p, cfg, x, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nd, rd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        q = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.rms_eps) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, s, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    cos, sin = rope_cache(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _mla_kv_from_latent(p, cfg, c_kv, k_rope):
+    """latent c_kv (B,S,r) + k_rope (B,S,rd) -> full k (B,S,H,nd+rd), v."""
+    b, s, _ = c_kv.shape
+    h = cfg.n_heads
+    nd, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, h, nd + vd)
+    k_nope, v = kv[..., :nd], kv[..., nd:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h,
+                                                          k_rope.shape[-1]))],
+        axis=-1)
+    return k, v
+
+
+def mla_apply(p: Params, cfg, x, positions, *, causal=True):
+    b, s, _ = x.shape
+    rd = cfg.qk_rope_head_dim
+    q = _mla_q(p, cfg, x, positions)
+    a = x @ p["wkv_a"]
+    c_kv = rms_norm(a[..., :cfg.kv_lora_rank], p["kv_a_norm"], cfg.rms_eps)
+    k_rope = a[..., cfg.kv_lora_rank:]
+    cos, sin = rope_cache(positions, rd, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]
+    k, v = _mla_kv_from_latent(p, cfg, c_kv, k_rope)
+    if s >= CHUNK_THRESHOLD:
+        # pad v's head dim up to q/k's so the chunked path can run, then
+        # slice back (nope+rope=192 vs v=128 for dsv2)
+        vd = v.shape[-1]
+        vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, q.shape[-1] - vd)))
+        o = chunked_sdpa(q, k, vpad, causal=causal)[..., :vd]
+    else:
+        o = sdpa(q, k, v, causal=causal)
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def mla_decode_absorbed(p: Params, cfg, x, pos, cache, kv_valid):
+    """MLA decode with weight absorption (DeepSeek-V2 inference form).
+
+    Instead of reconstructing full (B, S, H, nd+vd) K/V from the latent cache
+    each step, fold W_kv_b into the query/output sides:
+      score_nope = (q_nope W_uk) . c_kv      — per-head q in latent space
+      ctx        = softmax(score) . c_kv     — context in latent space
+      out        = (ctx W_uv) W_o
+    Transients are O(B*H*S) scores + O(B*H*r) vectors; the O(B*S*H*(nd+vd))
+    reconstruction never exists. See EXPERIMENTS.md §Perf (decode cell).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    nd, rd, vd, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim, cfg.kv_lora_rank)
+    q = _mla_q(p, cfg, x, pos[:, None])                    # (B,1,H,nd+rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    a = x @ p["wkv_a"]
+    c_new = rms_norm(a[..., :r], p["kv_a_norm"], cfg.rms_eps)
+    kr_new = a[..., r:]
+    cos, sin = rope_cache(pos[:, None], rd, cfg.rope_theta)
+    kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0]
+    cc, ckr = cache
+    bidx = jnp.arange(b)
+    cc = cc.at[bidx, pos].set(c_new[:, 0])                 # (B, S, r)
+    ckr = ckr.at[bidx, pos].set(kr_new[:, 0])              # (B, S, rd)
+
+    wkv_b = p["wkv_b"].reshape(r, h, nd + vd)
+    w_uk = wkv_b[..., :nd]                                 # (r, H, nd)
+    w_uv = wkv_b[..., nd:]                                 # (r, H, vd)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))           # (B, H, r)
+    s_nope = jnp.einsum("bhr,bsr->bhs", q_lat,
+                        cc.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bsd->bhs",
+                        q_rope[:, 0].astype(jnp.float32),
+                        ckr.astype(jnp.float32))
+    scores = (s_nope + s_rope) / ((nd + rd) ** 0.5)
+    skv = cc.shape[1]
+    valid = jnp.arange(skv)[None, :] < kv_valid[:, None]
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)                    # (B, H, S)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, cc.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
+    out = o.reshape(b, 1, h * vd).astype(x.dtype) @ p["wo"]
+    return out, (cc, ckr)
+
+
+def mla_decode(p: Params, cfg, x, pos, cache, kv_valid):
+    """MLA decode caches the *latent* (c_kv, k_rope): (B, Smax, r), (B, Smax,
+    rd) — the paper's 576-per-token cache instead of H*(nd+vd)."""
+    b = x.shape[0]
+    rd = cfg.qk_rope_head_dim
+    q = _mla_q(p, cfg, x, pos[:, None])
+    a = x @ p["wkv_a"]
+    c_new = rms_norm(a[..., :cfg.kv_lora_rank], p["kv_a_norm"], cfg.rms_eps)
+    kr_new = a[..., cfg.kv_lora_rank:]
+    cos, sin = rope_cache(pos[:, None], rd, cfg.rope_theta)
+    kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0]
+    cc, ckr = cache
+    bidx = jnp.arange(b)
+    cc = cc.at[bidx, pos].set(c_new[:, 0])
+    ckr = ckr.at[bidx, pos].set(kr_new[:, 0])
+    k, v = _mla_kv_from_latent(p, cfg, cc, ckr)
+    o = sdpa(q, k, v, causal=False, kv_len_valid=kv_valid)
+    return o.reshape(b, 1, -1) @ p["wo"], (cc, ckr)
+
+
+# ------------------------------------------------------------------- ffn
+def swiglu_init(key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, d, d_ff, dtype),
+            "w_up": dense_init(k2, d, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d, dtype)}
+
+
+def swiglu_apply(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def mlp_init(key, dims, dtype=jnp.float32, bias: bool = True) -> Params:
+    """Plain relu MLP: dims = (in, h1, ..., out)."""
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(key, i)
+        layers.append({"w": dense_init(k, a, b, dtype),
+                       "b": jnp.zeros((b,), dtype) if bias else None})
+    return {"layers": layers}
+
+
+def mlp_apply(p: Params, x: jax.Array, final_act: bool = False) -> jax.Array:
+    n = len(p["layers"])
+    for i, lyr in enumerate(p["layers"]):
+        x = x @ lyr["w"]
+        if lyr["b"] is not None:
+            x = x + lyr["b"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,112 @@
+"""Token-choice MoE (DeepSeek style: shared experts + routed top-k).
+
+Dispatch is the GShard capacity-based einsum form, grouped so the one-hot
+dispatch tensor stays bounded: tokens split into groups of `group_size`, each
+group dispatching to per-expert capacity C = ceil(group_size * top_k / E *
+capacity_factor). Under sharding the dispatch/combine tensors and expert
+weights shard on the expert axis -> XLA emits the canonical all-to-all pair.
+
+Aux load-balancing loss follows DeepSeek: E/(k*T) * sum_e f_e * P_e.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, swiglu_apply, swiglu_init
+
+Params = Dict[str, Any]
+
+
+def moe_init(key, cfg) -> Params:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    d, e, m = cfg.d_model, cfg.n_routed_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": dense_init(ks[0], d, e, jnp.float32, scale=d ** -0.5),
+        "w_gate": (jax.random.normal(ks[1], (e, d, m)) * d ** -0.5).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (e, d, m)) * d ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, m, d)) * m ** -0.5).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_init(ks[4], d, cfg.n_shared_experts * m, dt)
+    return p
+
+
+@functools.partial(jax.jit, static_argnames=("top_k",))
+def _route(logits: jax.Array, top_k: int):
+    """(T, E) f32 -> (weights (T, k), expert ids (T, k), aux loss)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)   # renormalize
+    e = logits.shape[-1]
+    # aux: fraction routed to e * mean prob of e
+    f = jnp.mean(jnp.sum(jax.nn.one_hot(idx, e), axis=1), axis=0)   # (E,)
+    pbar = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f * pbar) / top_k
+    return w, idx, aux
+
+
+def moe_apply(p: Params, cfg, x: jax.Array):
+    """x (B, S, d) -> (out (B, S, d), aux loss scalar)."""
+    group_size = cfg.moe_group_size
+    capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    e, k = cfg.n_routed_experts, cfg.moe_top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    g = max(1, t // min(group_size, t))
+    gs = t // g
+    assert g * gs == t, f"tokens {t} not divisible by groups {g}"
+    cap = max(k, int(gs * k * capacity_factor / e) + 1)
+
+    logits = xt.astype(jnp.float32) @ p["router"]
+    w, idx, aux = _route(logits, k)                        # (T,k)
+
+    from repro import flags
+    if flags.MOE_SHARD_CONSTRAINTS:
+        from repro.distributed.sharding import active_dp_axes, maybe_shard
+        dp = active_dp_axes()
+    else:
+        dp = None
+    # groups shard over DP, experts over `model`; pinning every dispatch
+    # tensor prevents the SPMD partitioner's involuntary-full-remat thrash
+    # (hypothesis P1 in EXPERIMENTS.md §Perf).
+    con = (lambda t, *s: maybe_shard(t, *s)) if dp is not None else \
+        (lambda t, *s: t)
+
+    wg = w.reshape(g, gs, k)
+    idxg = idx.reshape(g, gs, k)
+    # position of each (token, choice) in its expert's queue, per group
+    onehot = jax.nn.one_hot(idxg, e, dtype=jnp.int32)      # (g, gs, k, E)
+    onehot = con(onehot, dp, None, None, "model")
+    flat = onehot.reshape(g, gs * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                     # (g, gs*k, E)
+    pos = pos.reshape(g, gs, k, e)
+    in_cap = pos < cap
+    # dispatch: (g, gs, k, E, C) one-hot -> combine with weights
+    pos_oh = jax.nn.one_hot(jnp.where(in_cap, pos, cap), cap + 1,
+                            dtype=x.dtype)[..., :cap]      # overflow -> drop
+    disp = (onehot.astype(x.dtype)[..., None] * pos_oh)    # (g,gs,k,E,C)
+    disp = con(disp, dp, None, None, "model", None)
+    disp_tok = con(jnp.sum(disp, axis=2), dp, None, "model", None)
+    comb = jnp.sum(disp * wg[..., None, None].astype(x.dtype), axis=2)
+    comb = con(comb, dp, None, "model", None)
+
+    xg = xt.reshape(g, gs, d)
+    expert_in = con(jnp.einsum("gsec,gsd->gecd", disp_tok, xg),
+                    dp, "model", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edm->gecm", expert_in, p["w_gate"])) \
+        * jnp.einsum("gecd,edm->gecm", expert_in, p["w_up"])
+    h = con(h, dp, "model", None, None)
+    expert_out = con(jnp.einsum("gecm,emd->gecd", h, p["w_down"]),
+                     dp, "model", None, None)
+    out = con(jnp.einsum("gsec,gecd->gsd", comb, expert_out),
+              dp, None, None).reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        out = out + swiglu_apply(p["shared"], x)
+    return out, aux.astype(jnp.float32)

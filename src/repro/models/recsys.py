@@ -1,0 +1,317 @@
+"""The four assigned recsys architectures: dlrm-mlperf, two-tower-retrieval,
+sasrec, din. Uniform surface per model:
+
+  init_params(key, cfg)
+  loss_fn(params, cfg, batch)            -> (loss, metrics)    train_step
+  score(params, cfg, batch)              -> logits/scores      serve_step
+  retrieval_scores(params, cfg, query_batch, candidate_ids)    retrieval_cand
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.models import recsys_common as C
+from repro.models.layers import (
+    dense_init, mlp_apply, mlp_init, rms_norm, sdpa,
+)
+
+Params = Dict[str, Any]
+
+
+def _tables(key, cfg, dtype=jnp.float32):
+    return C.init_tables(key, cfg.table_vocabs, cfg.embed_dim, dtype)
+
+
+def _offsets(cfg):
+    return C.table_offsets(cfg.table_vocabs)
+
+
+def _lk(fn, table, ids):
+    """Every table access in every model goes through here: `fn` is the
+    row-sharded shard_map lookup at scale, plain take otherwise. ids may be
+    any shape; returns ids.shape + (D,)."""
+    flat = ids.reshape(-1)
+    rows = table[flat] if fn is None else fn(table, flat)
+    return rows.reshape(*ids.shape, table.shape[1])
+
+
+def _bag(fn, table, ids, combiner="mean"):
+    """Multi-hot (-1 padded) bag via the same lookup hook."""
+    rows = _lk(fn, table, jnp.maximum(ids, 0))
+    w = (ids >= 0).astype(rows.dtype)[..., None]
+    out = jnp.sum(rows * w, axis=-2)
+    if combiner == "mean":
+        out = out / jnp.maximum(jnp.sum(w, axis=-2), 1e-9)
+    return out
+
+
+# ===========================================================================
+# DLRM
+# ===========================================================================
+
+
+def dlrm_init(key, cfg: RecsysConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_f = cfg.n_sparse + 1
+    n_int = n_f * (n_f - 1) // 2
+    return {
+        "table": _tables(k1, cfg),
+        "bot": mlp_init(k2, (cfg.n_dense,) + cfg.bot_mlp),
+        "top": mlp_init(k3, (n_int + cfg.bot_mlp[-1],) + cfg.top_mlp),
+    }
+
+
+def dlrm_forward(params, cfg, batch, lookup_fn=None) -> jax.Array:
+    ids = C.globalize_ids(batch["sparse_ids"], _offsets(cfg))[:, :, 0] \
+        if batch["sparse_ids"][0].ndim == 3 else \
+        C.globalize_ids(batch["sparse_ids"], _offsets(cfg))
+    emb = _lk(lookup_fn, params["table"], ids)              # (B, 26, D)
+    bot = mlp_apply(params["bot"], batch["dense"], final_act=True)
+    vecs = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, 27, D)
+    z = C.dot_interaction(vecs)
+    return mlp_apply(params["top"], jnp.concatenate([bot, z], axis=1))[:, 0]
+
+
+def dlrm_loss(params, cfg, batch, lookup_fn=None):
+    logits = dlrm_forward(params, cfg, batch, lookup_fn)
+    loss = C.bce_loss(logits, batch["label"])
+    return loss, {"loss": loss}
+
+
+# ===========================================================================
+# Two-tower retrieval
+# ===========================================================================
+# tables: (user_id, history_item, item_id, item_category)
+
+
+def two_tower_init(key, cfg: RecsysConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "table": _tables(k1, cfg),
+        "user_tower": mlp_init(k2, (2 * d,) + cfg.tower_mlp),
+        "item_tower": mlp_init(k3, (2 * d,) + cfg.tower_mlp),
+    }
+
+
+def _l2norm(x):
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def user_embed(params, cfg, batch, lookup_fn=None) -> jax.Array:
+    off = _offsets(cfg)
+    uid = batch["sparse_ids"][0][:, 0] + int(off[0])
+    u = _lk(lookup_fn, params["table"], uid)
+    hist = jnp.where(batch["sparse_ids"][1] >= 0,
+                     batch["sparse_ids"][1] + int(off[1]), -1)
+    h = _bag(lookup_fn, params["table"], hist, "mean")
+    return _l2norm(mlp_apply(params["user_tower"],
+                             jnp.concatenate([u, h], axis=1)))
+
+
+def item_embed(params, cfg, item_ids, cate_ids, lookup_fn=None) -> jax.Array:
+    off = _offsets(cfg)
+    i = _lk(lookup_fn, params["table"], item_ids + int(off[2]))
+    c = _lk(lookup_fn, params["table"], cate_ids + int(off[3]))
+    return _l2norm(mlp_apply(params["item_tower"],
+                             jnp.concatenate([i, c], axis=1)))
+
+
+def two_tower_loss(params, cfg, batch, lookup_fn=None):
+    u = user_embed(params, cfg, batch, lookup_fn)
+    items = batch["sparse_ids"][2][:, 0]
+    cates = batch["sparse_ids"][3][:, 0]
+    v = item_embed(params, cfg, items, cates, lookup_fn)
+    # logQ correction under uniform in-batch sampling is a constant shift;
+    # pass the actual sampling propensities when the sampler is non-uniform.
+    log_q = jnp.zeros((v.shape[0],), jnp.float32)
+    loss = C.sampled_softmax_loss(u, v, log_q)
+    return loss, {"loss": loss}
+
+
+def two_tower_score(params, cfg, batch, lookup_fn=None):
+    u = user_embed(params, cfg, batch, lookup_fn)
+    v = item_embed(params, cfg, batch["sparse_ids"][2][:, 0],
+                   batch["sparse_ids"][3][:, 0], lookup_fn)
+    return jnp.sum(u * v, axis=1)
+
+
+def two_tower_retrieval(params, cfg, batch, cand_items, cand_cates,
+                        lookup_fn=None):
+    """1 query vs C candidates: one (1, D) x (D, C) matmul — never a loop."""
+    u = user_embed(params, cfg, batch, lookup_fn)                # (1, D)
+    v = item_embed(params, cfg, cand_items, cand_cates, lookup_fn)  # (C, D)
+    return (u @ v.T)[0]                                          # (C,)
+
+
+# ===========================================================================
+# SASRec
+# ===========================================================================
+
+
+def sasrec_init(key, cfg: RecsysConfig) -> Params:
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[2 + i], 6)
+        blocks.append({
+            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+            "wq": dense_init(kb[0], d, d, jnp.float32),
+            "wk": dense_init(kb[1], d, d, jnp.float32),
+            "wv": dense_init(kb[2], d, d, jnp.float32),
+            "wo": dense_init(kb[3], d, d, jnp.float32),
+            "w1": dense_init(kb[4], d, d, jnp.float32),
+            "w2": dense_init(kb[5], d, d, jnp.float32),
+        })
+    return {
+        "table": _tables(ks[0], cfg),
+        "pos": (jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.02),
+        "blocks": blocks,
+        "final_ln": jnp.ones((d,)),
+    }
+
+
+def sasrec_hidden(params, cfg, history, lookup_fn=None) -> jax.Array:
+    """history (B, S) item ids (-1 pads) -> (B, S, D) causal states."""
+    b, s = history.shape
+    h = _lk(lookup_fn, params["table"], jnp.maximum(history, 0)) \
+        + params["pos"][None, :s]
+    h = h * (history >= 0)[..., None]
+    nh = cfg.n_heads
+    hd = cfg.embed_dim // nh
+    for blk in params["blocks"]:
+        x = rms_norm(h, blk["ln1"])
+        q = (x @ blk["wq"]).reshape(b, s, nh, hd)
+        k = (x @ blk["wk"]).reshape(b, s, nh, hd)
+        v = (x @ blk["wv"]).reshape(b, s, nh, hd)
+        o = sdpa(q, k, v, causal=True).reshape(b, s, -1)
+        h = h + o @ blk["wo"]
+        x = rms_norm(h, blk["ln2"])
+        h = h + jax.nn.relu(x @ blk["w1"]) @ blk["w2"]
+    return rms_norm(h, params["final_ln"])
+
+
+def sasrec_loss(params, cfg, batch, lookup_fn=None, n_neg: int = 512):
+    hist = batch["history"]
+    h = sasrec_hidden(params, cfg, hist[:, :-1], lookup_fn)  # predict shifted
+    pos_ids = hist[:, 1:]
+    pos_e = _lk(lookup_fn, params["table"], jnp.maximum(pos_ids, 0))
+    pos_logit = jnp.sum(h * pos_e, axis=-1)
+    # shared sampled negatives (uniform)
+    neg_ids = jax.random.randint(
+        jax.random.PRNGKey(0) if "rng" not in batch else batch["rng"],
+        (n_neg,), 0, cfg.table_vocabs[0])
+    neg_e = _lk(lookup_fn, params["table"], neg_ids)        # (n_neg, D)
+    neg_logit = jnp.einsum("bsd,nd->bsn", h, neg_e)
+    logits = jnp.concatenate([pos_logit[..., None], neg_logit], axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = (pos_ids >= 0).astype(jnp.float32)
+    loss = -jnp.sum(logp[..., 0] * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss}
+
+
+def sasrec_score(params, cfg, batch, lookup_fn=None):
+    """CTR-style: score target item against the sequence state."""
+    h = sasrec_hidden(params, cfg, batch["history"], lookup_fn)[:, -1]
+    t = _lk(lookup_fn, params["table"], batch["target"])
+    return jnp.sum(h * t, axis=-1)
+
+
+def sasrec_retrieval(params, cfg, batch, cand_items, lookup_fn=None):
+    h = sasrec_hidden(params, cfg, batch["history"], lookup_fn)[:, -1]
+    v = _lk(lookup_fn, params["table"], cand_items)           # (C, D)
+    return (h @ v.T)[0]
+
+
+# ===========================================================================
+# DIN
+# ===========================================================================
+# tables: (goods_id, category_id); embedding of an item = [goods ; cate]
+
+
+def din_init(key, cfg: RecsysConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d2 = 2 * cfg.embed_dim
+    return {
+        "table": _tables(k1, cfg),
+        "attn": mlp_init(k2, (4 * d2,) + cfg.attn_mlp + (1,)),
+        "top": mlp_init(k3, (3 * d2,) + cfg.top_mlp + (1,)),
+    }
+
+
+def _din_item_emb(params, cfg, goods_ids, lookup_fn=None):
+    off = _offsets(cfg)
+    cate = jnp.maximum(goods_ids, 0) % cfg.table_vocabs[1]
+    g = _lk(lookup_fn, params["table"],
+            jnp.maximum(goods_ids, 0) + int(off[0]))
+    c = _lk(lookup_fn, params["table"], cate + int(off[1]))
+    return jnp.concatenate([g, c], axis=-1)
+
+
+def din_pooled(params, cfg, history, hist_len, target_e, lookup_fn=None):
+    """Local activation unit -> weighted sum pool of history."""
+    h_e = _din_item_emb(params, cfg, history, lookup_fn)    # (B, S, 2d)
+    t_e = jnp.broadcast_to(target_e[:, None, :], h_e.shape)
+    feat = jnp.concatenate([t_e, h_e, t_e - h_e, t_e * h_e], axis=-1)
+    a = mlp_apply(params["attn"], feat)[..., 0]             # (B, S)
+    s = history.shape[1]
+    mask = jnp.arange(s)[None, :] < hist_len[:, None]
+    a = jnp.where(mask & (history >= 0), a, -1e30)
+    w = jax.nn.softmax(a, axis=1)
+    return jnp.einsum("bs,bsd->bd", w, h_e)
+
+
+def din_forward(params, cfg, batch, lookup_fn=None):
+    t_e = _din_item_emb(params, cfg, batch["target"], lookup_fn)
+    pooled = din_pooled(params, cfg, batch["history"], batch["history_len"],
+                        t_e, lookup_fn)
+    x = jnp.concatenate([pooled, t_e, pooled * t_e], axis=-1)
+    return mlp_apply(params["top"], x)[:, 0]
+
+
+def din_loss(params, cfg, batch, lookup_fn=None):
+    logits = din_forward(params, cfg, batch, lookup_fn)
+    loss = C.bce_loss(logits, batch["label"])
+    return loss, {"loss": loss}
+
+
+def din_retrieval(params, cfg, batch, cand_items, lookup_fn=None):
+    """1 user x C candidate targets — target attention broadcast over C
+    (each candidate re-attends the history)."""
+    t_e = _din_item_emb(params, cfg, cand_items, lookup_fn)  # (C, 2d)
+    hist = jnp.broadcast_to(batch["history"][0][None],
+                            (cand_items.shape[0],) + batch["history"].shape[1:])
+    hl = jnp.broadcast_to(batch["history_len"][0][None],
+                          (cand_items.shape[0],))
+    pooled = din_pooled(params, cfg, hist, hl, t_e, lookup_fn)
+    x = jnp.concatenate([pooled, t_e, pooled * t_e], axis=-1)
+    return mlp_apply(params["top"], x)[:, 0]
+
+
+# ===========================================================================
+# dispatch
+# ===========================================================================
+
+INIT = {"dlrm-mlperf": dlrm_init, "two-tower-retrieval": two_tower_init,
+        "sasrec": sasrec_init, "din": din_init}
+LOSS = {"dlrm-mlperf": dlrm_loss, "two-tower-retrieval": two_tower_loss,
+        "sasrec": sasrec_loss, "din": din_loss}
+SCORE = {"dlrm-mlperf": lambda p, c, b, f=None: dlrm_forward(p, c, b, f),
+         "two-tower-retrieval": two_tower_score,
+         "sasrec": sasrec_score,
+         "din": lambda p, c, b, f=None: din_forward(p, c, b, f)}
+
+
+def family_of(cfg: RecsysConfig) -> str:
+    name = cfg.name.replace("-smoke", "")
+    for k in INIT:
+        if name.startswith(k.split("-")[0]):
+            return k
+    raise KeyError(cfg.name)

@@ -1,0 +1,287 @@
+"""Decoder-only TransformerLM covering all five assigned LM configs.
+
+Layers run under `jax.lax.scan` over a stacked parameter pytree (small HLO,
+fast multi-pod compiles, natural remat boundary). DeepSeek-style leading
+dense layers (first_dense_layers) are unrolled separately ahead of the
+homogeneous scanned stack.
+
+Three entry points:
+  forward(tokens)                 — train/eval logits
+  prefill(tokens)                 — logits + KV cache
+  decode_step(token, cache, pos)  — one token with cache (serve_step)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import layers as L
+from repro.models.moe import moe_apply, moe_init
+
+Params = Dict[str, Any]
+
+
+class KVCache(NamedTuple):
+    """Stacked per-layer caches. GQA: k/v (Lyr, B, Smax, KV, hd).
+    MLA: c_kv (Lyr, B, Smax, r) and k_rope (Lyr, B, Smax, rd)."""
+    a: jax.Array
+    b: jax.Array
+    length: jax.Array      # (B,) valid lengths
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------- init
+def _layer_init(key, cfg: LMConfig, moe_layer: bool) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    attn = L.mla_init(k1, cfg) if cfg.use_mla else L.gqa_init(k1, cfg)
+    p: Params = {
+        "ln1": jnp.ones((cfg.d_model,), _dt(cfg)),
+        "ln2": jnp.ones((cfg.d_model,), _dt(cfg)),
+        "attn": attn,
+    }
+    if moe_layer:
+        p["moe"] = moe_init(k2, cfg)
+    else:
+        width = cfg.dense_d_ff if (cfg.moe and cfg.dense_d_ff) else cfg.d_ff
+        p["ffn"] = L.swiglu_init(k2, cfg.d_model, width, _dt(cfg))
+    return p
+
+
+def init_params(key, cfg: LMConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    n_dense = cfg.first_dense_layers if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(_dt(cfg)),
+        "final_norm": jnp.ones((cfg.d_model,), _dt(cfg)),
+        "dense_layers": [
+            _layer_init(jax.random.fold_in(ks[1], i), cfg, moe_layer=False)
+            for i in range(n_dense)],
+        "layers": jax.vmap(
+            lambda k: _layer_init(k, cfg, moe_layer=cfg.moe))(
+                jax.random.split(ks[2], n_scan)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(ks[3], (cfg.d_model,
+                                                  cfg.vocab_size))
+                        * cfg.d_model ** -0.5).astype(_dt(cfg))
+    return p
+
+
+# ---------------------------------------------------------------- forward
+def _block(p: Params, cfg: LMConfig, x, positions, *, moe_layer: bool):
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    if cfg.use_mla:
+        h = L.mla_apply(p["attn"], cfg, h, positions)
+    else:
+        h = L.gqa_apply(p["attn"], cfg, h, positions)
+    x = x + h
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    if moe_layer:
+        h, aux = moe_apply(p["moe"], cfg, h)
+    else:
+        h, aux = L.swiglu_apply(p["ffn"], h), jnp.float32(0.0)
+    return x + h, aux
+
+
+def forward(params: Params, cfg: LMConfig, tokens: jax.Array,
+            remat: bool = True):
+    """tokens (B, S) -> (logits (B, S, V) f32, aux loss)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    aux_total = jnp.float32(0.0)
+    for lp in params["dense_layers"]:
+        x, aux = _block(lp, cfg, x, positions, moe_layer=False)
+        aux_total += aux
+
+    block = functools.partial(_block, cfg=cfg, moe_layer=cfg.moe)
+
+    def body(carry, lp):
+        x, auxs = carry
+        fn = jax.checkpoint(lambda p_, x_: block(p_, x=x_,
+                                                 positions=positions)) \
+            if remat else (lambda p_, x_: block(p_, x=x_,
+                                                positions=positions))
+        x, aux = fn(lp, x)
+        return (x, auxs + aux), None
+
+    (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head).astype(jnp.float32)
+    return logits, aux_total
+
+
+def lm_loss(params: Params, cfg: LMConfig, batch: Dict[str, jax.Array],
+            remat: bool = True):
+    from repro import flags
+    logits, aux = forward(params, cfg, batch["tokens"], remat=remat)
+    labels = batch["labels"]
+    if flags.SHARDED_CE:
+        # vocab-sharding-safe CE: reductions over V stay sharded (XLA emits
+        # tiny (B,S) all-reduces); the (tokens, V) logits are never gathered.
+        # Hypothesis P2 in EXPERIMENTS.md §Perf.
+        m = jnp.max(logits, axis=-1)
+        lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+        onehot = jax.nn.one_hot(labels, logits.shape[-1],
+                                dtype=logits.dtype)
+        lab = jnp.sum(logits * onehot, axis=-1)
+        nll = lse - lab
+    else:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    # ignore the final position (rolled label wraps around)
+    mask = jnp.ones_like(nll).at[:, -1].set(0.0)
+    loss = jnp.sum(nll * mask) / jnp.sum(mask)
+    total = loss + cfg.router_aux_loss * aux
+    return total, {"loss": loss, "aux": aux, "ppl": jnp.exp(loss)}
+
+
+# ---------------------------------------------------------------- serving
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> KVCache:
+    n_scan = cfg.n_layers - (cfg.first_dense_layers if cfg.moe else 0)
+    nl = cfg.n_layers
+    dt = _dt(cfg)
+    if cfg.use_mla:
+        a = jnp.zeros((nl, batch, max_len, cfg.kv_lora_rank), dt)
+        b = jnp.zeros((nl, batch, max_len, cfg.qk_rope_head_dim), dt)
+    else:
+        a = jnp.zeros((nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt)
+        b = jnp.zeros_like(a)
+    del n_scan
+    return KVCache(a=a, b=b, length=jnp.zeros((batch,), jnp.int32))
+
+
+def decode_step(params: Params, cfg: LMConfig, token: jax.Array,
+                cache: KVCache, pos: jax.Array):
+    """token (B,), pos (B,) absolute position -> (logits (B, V), new cache).
+
+    The single serve_step the decode_* dry-run cells lower.
+    """
+    b = token.shape[0]
+    x = params["embed"][token][:, None, :]                  # (B, 1, d)
+    n_dense = len(params["dense_layers"])
+    kv_valid = pos + 1
+
+    def attn_one(lp, x, ca, cb):
+        h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+        if cfg.use_mla:
+            h, (ca, cb) = L.mla_decode_absorbed(
+                lp["attn"], cfg, h, pos, (ca, cb), kv_valid)
+        else:
+            h, (ca, cb) = L.gqa_decode(lp["attn"], cfg, h, pos, (ca, cb),
+                                       kv_valid)
+        x = x + h
+        h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+        if "moe" in lp:
+            h, _ = moe_apply(lp["moe"], cfg, h)
+        else:
+            h = L.swiglu_apply(lp["ffn"], h)
+        return x + h, ca, cb
+
+    ca_all, cb_all = cache.a, cache.b
+    for i, lp in enumerate(params["dense_layers"]):
+        x, ca, cb = attn_one(lp, x, ca_all[i], cb_all[i])
+        ca_all = ca_all.at[i].set(ca)
+        cb_all = cb_all.at[i].set(cb)
+
+    def body(x, inp):
+        lp, ca, cb = inp
+        x, ca, cb = attn_one(lp, x, ca, cb)
+        return x, (ca, cb)
+
+    x, (ca_s, cb_s) = jax.lax.scan(
+        body, x, (params["layers"], ca_all[n_dense:], cb_all[n_dense:]))
+    ca_all = jax.lax.dynamic_update_slice_in_dim(ca_all, ca_s, n_dense, 0)
+    cb_all = jax.lax.dynamic_update_slice_in_dim(cb_all, cb_s, n_dense, 0)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    return logits, KVCache(a=ca_all, b=cb_all, length=kv_valid)
+
+
+def _block_with_cache(lp: Params, cfg: LMConfig, x, positions, *,
+                      moe_layer: bool):
+    """One causal block that also emits its (ca, cb) cache entries."""
+    b, s, _ = x.shape
+    h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+    if cfg.use_mla:
+        a = h @ lp["attn"]["wkv_a"]
+        c_kv = L.rms_norm(a[..., :cfg.kv_lora_rank],
+                          lp["attn"]["kv_a_norm"], cfg.rms_eps)
+        k_rope = a[..., cfg.kv_lora_rank:]
+        cos, sin = L.rope_cache(positions, cfg.qk_rope_head_dim,
+                                cfg.rope_theta)
+        k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]
+        ca, cb = c_kv, k_rope
+        q = L._mla_q(lp["attn"], cfg, h, positions)
+        k, v = L._mla_kv_from_latent(lp["attn"], cfg, c_kv, k_rope)
+        if s >= L.CHUNK_THRESHOLD:
+            vd = v.shape[-1]
+            vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                             (0, q.shape[-1] - vd)))
+            o = L.chunked_sdpa(q, k, vp, causal=True)[..., :vd]
+        else:
+            o = L.sdpa(q, k, v, causal=True)
+        h = o.reshape(b, s, -1) @ lp["attn"]["wo"]
+    else:
+        q, k, v = L.gqa_qkv(lp["attn"], cfg, h, positions)
+        ca, cb = k, v
+        h = L.attention(q, k, v, causal=True).reshape(b, s, -1) \
+            @ lp["attn"]["wo"]
+    x = x + h
+    h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+    if moe_layer:
+        h, _ = moe_apply(lp["moe"], cfg, h)
+    else:
+        h = L.swiglu_apply(lp["ffn"], h)
+    return x + h, ca, cb
+
+
+def prefill(params: Params, cfg: LMConfig, tokens: jax.Array,
+            max_len: Optional[int] = None):
+    """One scanned causal pass -> (logits (B,S,V), populated KVCache)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    a_head, b_head = [], []
+    for lp in params["dense_layers"]:
+        x, ca, cb = _block_with_cache(lp, cfg, x, positions, moe_layer=False)
+        a_head.append(ca)
+        b_head.append(cb)
+
+    def body(x, lp):
+        x, ca, cb = _block_with_cache(lp, cfg, x, positions,
+                                      moe_layer=cfg.moe)
+        return x, (ca, cb)
+
+    x, (ca_s, cb_s) = jax.lax.scan(body, x, params["layers"])
+    if a_head:
+        ca_s = jnp.concatenate([jnp.stack(a_head), ca_s])
+        cb_s = jnp.concatenate([jnp.stack(b_head), cb_s])
+
+    pad = [(0, 0), (0, 0), (0, max_len - s)] + [(0, 0)] * (ca_s.ndim - 3)
+    cache = KVCache(a=jnp.pad(ca_s, pad), b=jnp.pad(cb_s, pad),
+                    length=jnp.full((b,), s, jnp.int32))
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head).astype(jnp.float32)
+    return logits, cache

@@ -1,0 +1,7 @@
+from repro.optim.adamw import (  # noqa: F401
+    Optimizer, adamw, clip_by_global_norm, cosine_schedule, global_norm,
+    mixed_optimizer,
+)
+from repro.optim.compression import (  # noqa: F401
+    compress_with_feedback, compression_ratio, init_error_state,
+)

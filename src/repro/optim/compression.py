@@ -1,0 +1,65 @@
+"""int8 error-feedback gradient compression (distributed-optimization trick).
+
+Per-leaf blockwise symmetric int8 quantization with an error-feedback
+accumulator (1-bit-Adam-style residual correction): the quantization error of
+step t is added to the gradient of step t+1, so compression bias vanishes and
+convergence is preserved. On a real fabric the all-reduce then moves int8
+payloads (4x less than f32); semantics here are bit-exact to that schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_leaf(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return deq[:n].reshape(shape)
+
+
+def compress_with_feedback(grads, err_state):
+    """grads + carried error -> (dequantized grads, new error state).
+
+    Returned grads are exactly what the int8 wire format transports.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = _quantize_leaf(corrected)
+        deq = _dequantize_leaf(q, scale, g.shape)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))
+
+
+def compression_ratio(params) -> float:
+    """Wire bytes int8 (payload+scales) vs f32."""
+    total = sum(p.size for p in jax.tree.leaves(params))
+    blocks = sum(-(-p.size // BLOCK) for p in jax.tree.leaves(params))
+    return (total * 1 + blocks * 4) / (total * 4)

@@ -1,0 +1,37 @@
+"""Token sampling for the LM decode loop (serving substrate)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "top_k"))
+def sample_token(key: jax.Array, logits: jax.Array,
+                 temperature: float = 1.0, top_k: int = 0) -> jax.Array:
+    """logits (B, V) -> token ids (B,). temperature<=0 means greedy."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / jnp.maximum(temperature, 1e-6)
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def generate(params, cfg, decode_step, prompt_cache, first_token, pos0,
+             n_tokens: int, key: Optional[jax.Array] = None,
+             temperature: float = 0.0, top_k: int = 0):
+    """Greedy/sampled autoregressive loop over a jitted decode_step."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tokens = [first_token]
+    cache = prompt_cache
+    pos = pos0
+    for t in range(n_tokens):
+        logits, cache = decode_step(params, tokens[-1], cache, pos)
+        key, sub = jax.random.split(key)
+        tokens.append(sample_token(sub, logits, temperature, top_k))
+        pos = pos + 1
+    return jnp.stack(tokens[1:], axis=1), cache

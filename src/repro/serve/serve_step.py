@@ -1,0 +1,62 @@
+"""Serve-step factories per (family, shape kind) — what the decode/serve
+dry-run cells lower, and what the serving examples run."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import recsys, transformer
+
+
+def lm_prefill_step(cfg) -> Callable:
+    def step(params, tokens):
+        logits, cache = transformer.prefill(params, cfg, tokens)
+        return logits[:, -1], cache
+    return step
+
+
+def lm_decode_step(cfg) -> Callable:
+    def step(params, token, cache, pos):
+        return transformer.decode_step(params, cfg, token, cache, pos)
+    return step
+
+
+def recsys_score_step(cfg, lookup_fn=None) -> Callable:
+    fam = recsys.family_of(cfg)
+    def step(params, batch):
+        return recsys.SCORE[fam](params, cfg, batch, lookup_fn)
+    return step
+
+
+def recsys_retrieval_step(cfg, k: int = 10, lookup_fn=None) -> Callable:
+    """1 query x n_candidates scoring + top-k (the ANN-adjacent cell)."""
+    fam = recsys.family_of(cfg)
+
+    def step(params, batch, cand_ids):
+        if fam == "two-tower-retrieval":
+            cates = cand_ids % cfg.table_vocabs[3]
+            scores = recsys.two_tower_retrieval(params, cfg, batch, cand_ids,
+                                                cates, lookup_fn)
+        elif fam == "sasrec":
+            scores = recsys.sasrec_retrieval(params, cfg, batch, cand_ids,
+                                             lookup_fn)
+        elif fam == "din":
+            scores = recsys.din_retrieval(params, cfg, batch, cand_ids,
+                                          lookup_fn)
+        else:
+            # dlrm bulk-score: broadcast the user context over C rows and
+            # vary the first sparse feature (the candidate item)
+            c = cand_ids.shape[0]
+            bb = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[:1], (c,) + x.shape[1:]), batch)
+            sparse = list(bb["sparse_ids"])
+            sparse[0] = (cand_ids[:, None] % cfg.table_vocabs[0]).astype(
+                jnp.int32)
+            bb = dict(bb, sparse_ids=sparse)
+            scores = recsys.dlrm_forward(params, cfg, bb, lookup_fn)
+        top, idx = jax.lax.top_k(scores, k)
+        return top, cand_ids[idx]
+    return step

@@ -1,0 +1,93 @@
+"""Generic train-step factory: loss registry per family + grad accumulation
++ optional int8 error-feedback gradient compression, built to be jit'd with
+explicit shardings by the launcher (and lowered by the dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dimenet, recsys, transformer
+from repro.optim import Optimizer, compress_with_feedback
+
+
+def loss_fn_for(family: str, cfg, lookup_fn=None) -> Callable:
+    """(params, batch) -> (loss, metrics)."""
+    if family == "lm":
+        return lambda p, b: transformer.lm_loss(p, cfg, b)
+    if family == "gnn":
+        return lambda p, b: dimenet.loss_fn(p, cfg, b)
+    if family == "recsys":
+        fam = recsys.family_of(cfg)
+        return lambda p, b: recsys.LOSS[fam](p, cfg, b, lookup_fn)
+    raise KeyError(family)
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer, *,
+                    microbatches: int = 1, compress: bool = False,
+                    grad_shardings=None):
+    """Returns step(params, opt_state, batch[, err_state]) ->
+    (params, opt_state[, err_state], metrics).
+
+    microbatches > 1 splits the batch on axis 0 of every leaf and accumulates
+    grads under a scan (activation memory / global-batch decoupling).
+    grad_shardings (pytree of NamedSharding, usually the params') pins the
+    per-microbatch grads + accumulator — without it XLA replicates the
+    accumulator and all-gathers every weight gradient every microbatch
+    (hypothesis P5, EXPERIMENTS.md §Perf).
+    """
+
+    def constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            tree, grad_shardings)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return constrain(grads), metrics
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            return grads_of(params, batch)
+
+        def split(x):
+            from repro.distributed.sharding import shard_batch_seq
+            x = x.reshape(microbatches, x.shape[0] // microbatches,
+                          *x.shape[1:])
+            return shard_batch_seq(x, 1)   # keep batch on DP after reshape
+        mb = jax.tree.map(split, batch)
+
+        def body(acc, one):
+            g, m = grads_of(params, one)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return acc, m
+        # accumulate in the param dtype: halves the accumulator footprint
+        # at bf16 (DESIGN.md: f32 accumulation is a config away if needed)
+        zeros = constrain(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params))
+        acc, ms = jax.lax.scan(body, zeros, mb)
+        grads = jax.tree.map(lambda g: g / microbatches, acc)
+        metrics = jax.tree.map(lambda m: m[-1], ms)
+        return grads, metrics
+
+    if compress:
+        def step(params, opt_state, batch, err_state):
+            grads, metrics = accumulate(params, batch)
+            grads, err_state = compress_with_feedback(grads, err_state)
+            params, opt_state, om = optimizer.update(grads, opt_state,
+                                                     params)
+            return params, opt_state, err_state, {**metrics, **om}
+        return step
+
+    def step(params, opt_state, batch):
+        grads, metrics = accumulate(params, batch)
+        params, opt_state, om = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {**metrics, **om}
+
+    return step

@@ -1,0 +1,82 @@
+"""Fault-tolerant training loop.
+
+Posture for 1000+ nodes (single-process semantics here, multi-host notes in
+DESIGN.md):
+  * checkpoint every `ckpt_every` steps, async + atomic; resume picks the
+    latest complete checkpoint (a crash mid-write leaves only a .tmp dir,
+    which restore ignores);
+  * data order is a pure function of (seed, step) so resume replays the
+    exact stream with no state handshake (skip-ahead = start at step s);
+  * straggler hook: per-step wall-time watchdog records slow steps and, at
+    `straggler_factor` x median, invokes `on_straggler` (on a real cluster:
+    re-shard / evict; here: logged + tested via injection);
+  * preemption-safe: tested by killing the process mid-run and resuming
+    bit-exactly (tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    min_steps_for_watchdog: int = 5
+
+
+class Trainer:
+    def __init__(self, step_fn: Callable, batch_fn: Callable,
+                 cfg: TrainerConfig,
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        """step_fn(state, batch) -> (state, metrics);
+        batch_fn(step:int) -> batch (pure in step)."""
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.cfg = cfg
+        self.ckpt = Checkpointer(cfg.ckpt_dir, keep=cfg.keep)
+        self.on_straggler = on_straggler or (lambda s, t: None)
+        self.step_times: List[float] = []
+        self.slow_steps: List[int] = []
+        self.history: List[Dict[str, float]] = []
+
+    def restore_or_init(self, init_state):
+        if self.ckpt.latest_step() is not None:
+            state, step = self.ckpt.restore(init_state)
+            return state, step
+        return init_state, 0
+
+    def run(self, state, start_step: int = 0):
+        cfg = self.cfg
+        for step in range(start_step, cfg.total_steps):
+            batch = self.batch_fn(step)
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            if len(self.step_times) > cfg.min_steps_for_watchdog:
+                med = float(np.median(self.step_times[-50:]))
+                if dt > cfg.straggler_factor * med:
+                    self.slow_steps.append(step)
+                    self.on_straggler(step, dt / med)
+            if (step + 1) % cfg.ckpt_every == 0 or \
+                    step + 1 == cfg.total_steps:
+                self.ckpt.save(step + 1, state)
+            if (step + 1) % cfg.log_every == 0:
+                self.history.append(
+                    {k: float(v) for k, v in metrics.items()
+                     if np.ndim(v) == 0})
+        self.ckpt.wait()
+        return state

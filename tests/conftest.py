@@ -1,0 +1,29 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device; only launch/dryrun.py forces 512
+# placeholder devices (and only in its own process).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def ann_data():
+    """Shared small LAION-like dataset + exact ground truth."""
+    from repro.core.flat import FlatIndex
+    from repro.data import clustered_vectors, queries_like
+
+    key = jax.random.PRNGKey(0)
+    data = clustered_vectors(key, 2000, 32, n_clusters=12)
+    queries = queries_like(jax.random.PRNGKey(1), data, 48)
+    true_d, true_i = FlatIndex(data).search(queries, 10)
+    return {"data": data, "queries": queries, "true_d": true_d,
+            "true_i": true_i}
+
+
+@pytest.fixture(scope="session")
+def small_nsg(ann_data):
+    """One vanilla NSG build shared across search-path tests."""
+    from repro.core import build_vanilla_nsg
+
+    return build_vanilla_nsg(ann_data["data"], degree=12, ef_search=48,
+                             build_knn_k=12, build_candidates=32)

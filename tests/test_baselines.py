@@ -1,0 +1,47 @@
+"""Fig-1 baseline indexes: recall behaviour matching the paper's findings."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FlatIndex, recall_at_k
+from repro.core.hnsw import HNSWIndex
+from repro.core.ivf import IVFIndex
+from repro.core.pq import PQIndex
+
+
+def test_ivf_recall_increases_with_nprobe(ann_data):
+    data, q, ti = ann_data["data"], ann_data["queries"], ann_data["true_i"]
+    idx = IVFIndex(n_lists=32, nprobe=1).fit(data)
+    r1 = recall_at_k(idx.search(q, 10)[1], ti)
+    idx.nprobe = 8
+    r8 = recall_at_k(idx.search(q, 10)[1], ti)
+    idx.nprobe = 32                      # all lists == exact
+    r_all = recall_at_k(idx.search(q, 10)[1], ti)
+    assert r1 <= r8 <= r_all
+    assert r8 >= 0.7
+    assert r_all >= 0.999
+
+
+def test_pq_compresses_but_caps_recall(ann_data):
+    """Paper: PQ is memory-efficient and fast but can't hit recall 0.9
+    without re-ranking."""
+    data, q, ti = ann_data["data"], ann_data["queries"], ann_data["true_i"]
+    idx = PQIndex(m=8).fit(data)
+    d, i = idx.search(q, 10)
+    r = recall_at_k(i, ti)
+    assert 0.1 <= r <= 0.95              # lossy: below exact
+    raw = data.size * 4
+    assert idx.memory_bytes() < raw / 4  # >4x compression
+
+
+@pytest.mark.slow
+def test_hnsw_recall(ann_data):
+    data, q, ti = ann_data["data"], ann_data["queries"], ann_data["true_i"]
+    idx = HNSWIndex(m=12, ef_construction=48, ef_search=64).fit(data)
+    d, i = idx.search(q, 10)
+    assert recall_at_k(i, ti) >= 0.9
+
+
+def test_flat_is_exact(ann_data):
+    d, i = FlatIndex(ann_data["data"]).search(ann_data["queries"], 10)
+    assert recall_at_k(i, ann_data["true_i"]) == 1.0

@@ -1,0 +1,87 @@
+"""Sharded index: single-device path in-process, multi-device in subprocess
+(jax pins the device count at first init, so fake 8-cpu runs need their own
+process)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import IndexParams, recall_at_k
+from repro.core.distributed import ShardedIndex, make_sharded_l2_topk
+from repro.launch.mesh import make_host_mesh
+
+PARAMS = IndexParams(pca_dim=24, antihub_keep=1.0, ep_clusters=4,
+                     ef_search=48, graph_degree=12, build_knn_k=12,
+                     build_candidates=32)
+
+
+def test_sharded_index_single_device(ann_data):
+    mesh = make_host_mesh(data=1, model=1)
+    idx = ShardedIndex(PARAMS, mesh).fit(ann_data["data"])
+    d, i = idx.search(ann_data["queries"], 10)
+    assert recall_at_k(i, ann_data["true_i"]) >= 0.85
+
+
+def test_sharded_l2_topk_single_device(ann_data):
+    mesh = make_host_mesh(data=1, model=1)
+    fn = make_sharded_l2_topk(mesh, k=10, chunk=512)
+    import jax.numpy as jnp
+    offsets = jnp.zeros((1,), jnp.int32)
+    d, i = fn(ann_data["queries"], ann_data["data"], offsets)
+    assert recall_at_k(i, ann_data["true_i"]) == 1.0
+
+
+MULTI = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import IndexParams, recall_at_k
+    from repro.core.distributed import ShardedIndex, make_sharded_l2_topk
+    from repro.core.flat import FlatIndex
+    from repro.data import clustered_vectors, queries_like
+    from repro.launch.mesh import make_host_mesh
+
+    assert jax.device_count() == 8
+    key = jax.random.PRNGKey(0)
+    data = clustered_vectors(key, 1600, 24, n_clusters=8)
+    queries = queries_like(jax.random.PRNGKey(1), data, 32)
+    _, ti = FlatIndex(data).search(queries, 10)
+
+    mesh = make_host_mesh(data=2, model=4)
+    params = IndexParams(pca_dim=20, antihub_keep=0.95, ep_clusters=4,
+                         ef_search=48, graph_degree=12, build_knn_k=12,
+                         build_candidates=32)
+    idx = ShardedIndex(params, mesh).fit(data)
+    d, i = idx.search(queries, 10)
+    r = recall_at_k(i, ti)
+    assert r >= 0.85, f"sharded recall {r}"
+
+    # exact sharded brute force across 4 shards
+    fn = make_sharded_l2_topk(mesh, k=10, chunk=256)
+    m = 1600 // 4
+    offs = jnp.arange(4, dtype=jnp.int32) * m
+    d2, i2 = fn(queries, data, offs)
+    assert recall_at_k(i2, ti) == 1.0
+
+    # multi-pod mesh variant on the same fake devices
+    mesh3 = make_host_mesh(data=2, model=2, pod=2)
+    idx3 = ShardedIndex(params, mesh3).fit(data)
+    d3, i3 = idx3.search(queries, 10)
+    r3 = recall_at_k(i3, ti)
+    assert r3 >= 0.85, f"pod-mesh recall {r3}"
+    print("OK", r, r3)
+""")
+
+
+@pytest.mark.slow
+def test_sharded_index_eight_devices():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", MULTI], env=env,
+                         capture_output=True, text=True, cwd="/root/repo",
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK" in out.stdout

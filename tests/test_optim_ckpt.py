@@ -1,0 +1,171 @@
+"""Optimizer, gradient compression, checkpointing, trainer fault tolerance."""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.optim import (
+    adamw, compress_with_feedback, compression_ratio, cosine_schedule,
+    init_error_state, mixed_optimizer,
+)
+from repro.train.train_step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# ------------------------------------------------------------------- adamw
+def test_adamw_converges_quadratic():
+    opt = adamw(0.1)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum((p["w"] - jnp.array([1.0, 2.0])) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 2.0],
+                               atol=1e-2)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < float(lr(50)) < float(lr(10))
+
+
+def test_mixed_optimizer_table_rowwise():
+    opt = mixed_optimizer(1e-2, table_lr=0.1)
+    params = {"table": jnp.ones((8, 4)), "mlp": {"w": jnp.ones((4, 4))}}
+    state = opt.init(params)
+    assert state["leaves"]["table"]["acc"].shape == (8,)   # rowwise
+    assert state["leaves"]["mlp"]["w"]["m"].shape == (4, 4)
+    g = {"table": jnp.ones((8, 4)).at[0].set(0.0),
+         "mlp": {"w": jnp.ones((4, 4))}}
+    new_p, state, m = opt.update(g, state, params)
+    # zero-grad row untouched, others moved
+    np.testing.assert_allclose(np.asarray(new_p["table"][0]), 1.0)
+    assert float(jnp.max(jnp.abs(new_p["table"][1] - 1.0))) > 0
+
+
+# -------------------------------------------------------------- compression
+def test_compression_error_feedback_unbiased():
+    key = jax.random.PRNGKey(0)
+    g = {"w": jax.random.normal(key, (1000,))}
+    err = init_error_state(g)
+    total_sent = jnp.zeros((1000,))
+    n = 50
+    for i in range(n):
+        gi = {"w": g["w"]}                      # constant gradient stream
+        dq, err = compress_with_feedback(gi, err)
+        total_sent = total_sent + dq["w"]
+    # with error feedback the time-average converges to the true gradient
+    np.testing.assert_allclose(np.asarray(total_sent / n),
+                               np.asarray(g["w"]), atol=2e-2)
+    assert compression_ratio(g) < 0.3           # ~4x wire reduction
+
+
+def test_compressed_training_converges():
+    opt = adamw(0.05)
+    params = {"w": jnp.array([4.0, -4.0])}
+    state = opt.init(params)
+    err = init_error_state(params)
+    loss = lambda p: jnp.sum((p["w"]) ** 2)
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        g, err = compress_with_feedback(g, err)
+        params, state, _ = opt.update(g, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+# ------------------------------------------------------------- checkpoints
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "lst": [jnp.zeros((2,)), jnp.full((3,), 7.0)]}
+    for s in (1, 2, 3):
+        ck.save(s, jax.tree.map(lambda x: x + s, tree))
+    ck.wait()
+    assert ck.all_steps() == [2, 3]             # keep=2 gc'd step 1
+    restored, step = ck.restore(tree)
+    assert step == 3
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]) + 3)
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    ck.close()
+
+
+def test_checkpoint_ignores_partial_tmp(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(5, {"x": jnp.ones(3)})
+    ck.wait()
+    os.makedirs(tmp_path / "step_00000009.tmp")  # simulated crash mid-write
+    assert ck.latest_step() == 5
+    restored, _ = ck.restore({"x": jnp.zeros(3)})
+    np.testing.assert_allclose(np.asarray(restored["x"]), 1.0)
+    ck.close()
+
+
+# ---------------------------------------------------------------- trainer
+def _make_trainer(tmpdir, total=12):
+    opt = adamw(0.05, clip_norm=None)
+    loss_fn = lambda p, b: (jnp.sum((p["w"] - b) ** 2),
+                            {"loss": jnp.sum((p["w"] - b) ** 2)})
+    step_impl = jax.jit(make_train_step(loss_fn, opt))
+
+    def step_fn(state, batch):
+        params, opt_state = state
+        params, opt_state, metrics = step_impl(params, opt_state, batch)
+        return (params, opt_state), metrics
+
+    batch_fn = lambda s: jnp.full((2,), float(s % 3))   # pure in step
+    cfg = TrainerConfig(total_steps=total, ckpt_every=4, log_every=4,
+                        ckpt_dir=tmpdir)
+    return Trainer(step_fn, batch_fn, cfg), opt
+
+
+def test_trainer_resume_bit_exact(tmp_path):
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    params = {"w": jnp.array([1.0, -1.0])}
+    # uninterrupted run
+    tr, opt = _make_trainer(d1)
+    final = tr.run((params, opt.init(params)))
+    # interrupted at step 8, then resumed from checkpoint
+    tr2, opt2 = _make_trainer(d2)
+    tr2.cfg.total_steps = 8
+    tr2.run((params, opt2.init(params)))
+    tr3, _ = _make_trainer(d2)
+    state, start = tr3.restore_or_init((params, opt2.init(params)))
+    assert start == 8
+    resumed = tr3.run(state, start_step=start)
+    np.testing.assert_array_equal(np.asarray(final[0]["w"]),
+                                  np.asarray(resumed[0]["w"]))
+
+
+def test_trainer_straggler_detection(tmp_path):
+    import time
+    seen = []
+    opt = adamw(0.05)
+    loss_fn = lambda p, b: (jnp.sum(p["w"] ** 2), {"loss": jnp.float32(0)})
+    inner = jax.jit(make_train_step(loss_fn, opt))
+
+    def step_fn(state, batch):
+        params, opt_state = state
+        if batch[0] == 9:                       # injected straggler
+            time.sleep(0.25)
+        p, o, m = inner(params, opt_state, jnp.zeros(()))
+        return (p, o), m
+
+    cfg = TrainerConfig(total_steps=12, ckpt_every=100, log_every=100,
+                        ckpt_dir=str(tmp_path), straggler_factor=3.0)
+    tr = Trainer(step_fn, lambda s: jnp.full((1,), s), cfg,
+                 on_straggler=lambda s, f: seen.append((s, f)))
+    params = {"w": jnp.ones(2)}
+    tr.run((params, opt.init(params)))
+    assert any(s == 9 for s, _ in seen)

@@ -1,0 +1,57 @@
+"""§Perf optimizations must preserve semantics (flags.py toggles)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import flags
+from repro.configs import get_arch
+from repro.data import lm_batch
+
+
+@pytest.fixture(autouse=True)
+def _reset_flags():
+    flags.disable_all()
+    yield
+    flags.disable_all()
+
+
+def test_sharded_ce_matches_baseline():
+    from repro.models import transformer as T
+    cfg = get_arch("qwen2-1.5b").smoke_config
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = lm_batch(jax.random.PRNGKey(1), 4, 16, cfg.vocab_size)
+    flags.SHARDED_CE = False
+    l0, _ = T.lm_loss(params, cfg, batch)
+    flags.SHARDED_CE = True
+    l1, _ = T.lm_loss(params, cfg, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+def test_moe_constraints_noop_without_mesh():
+    from repro.models import transformer as T
+    cfg = get_arch("deepseek-moe-16b").smoke_config
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = lm_batch(jax.random.PRNGKey(1), 2, 16, cfg.vocab_size)
+    flags.MOE_SHARD_CONSTRAINTS = False
+    l0, _ = T.lm_loss(params, cfg, batch)
+    flags.MOE_SHARD_CONSTRAINTS = True
+    l1, _ = T.lm_loss(params, cfg, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6)
+
+
+def test_ann_bf16_and_tight_budget_keep_recall(ann_data):
+    from repro.core import IndexParams, recall_at_k
+    from repro.core.distributed import ShardedIndex
+    from repro.launch.mesh import make_host_mesh
+    params = IndexParams(pca_dim=24, antihub_keep=1.0, ep_clusters=4,
+                         ef_search=48, graph_degree=12, build_knn_k=12,
+                         build_candidates=32)
+    mesh = make_host_mesh(1, 1)
+    flags.ANN_BF16_BASE = True
+    flags.ANN_TIGHT_BUDGET = True
+    idx = ShardedIndex(params, mesh).fit(ann_data["data"])
+    assert idx.arrays.base.dtype == jnp.bfloat16
+    d, i = idx.search(ann_data["queries"], 10, mode="fori")
+    r = recall_at_k(i, ann_data["true_i"])
+    assert r >= 0.85, r

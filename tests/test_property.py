@@ -1,0 +1,114 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.antihub import antihub_keep_indices
+from repro.core.distances import l2_topk
+from repro.core.flat import recall_at_k
+from repro.core.pca import fit_pca
+from repro.core.tuning.space import Categorical, Float, Int, SearchSpace
+from repro.optim.compression import _dequantize_leaf, _quantize_leaf
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(20, 120), chunk_a=st.integers(8, 64),
+       chunk_b=st.integers(8, 64), seed=st.integers(0, 10**6))
+def test_l2_topk_chunk_invariance(n, chunk_a, chunk_b, seed):
+    """Streaming top-k must not depend on the block decomposition."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 8))
+    q = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, 8))
+    da, _ = l2_topk(q, x, 5, chunk=chunk_a)
+    db, _ = l2_topk(q, x, 5, chunk=chunk_b)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(db), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(alpha=st.floats(0.3, 1.0), seed=st.integers(0, 10**6))
+def test_antihub_size_and_uniqueness(alpha, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (80, 6))
+    kept = np.asarray(antihub_keep_indices(x, alpha, k=5))
+    assert len(kept) == max(1, int(np.ceil(alpha * 80)))
+    assert len(np.unique(kept)) == len(kept)
+    assert (np.diff(kept) > 0).all()
+
+
+@settings(**SETTINGS)
+@given(d=st.integers(2, 12), dr=st.integers(1, 12), seed=st.integers(0, 10**6))
+def test_pca_projection_idempotent(d, dr, seed):
+    dr = min(dr, d)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64, d))
+    p = fit_pca(x, dr)
+    z = p.transform(x)
+    # re-projecting the reconstruction is a fixpoint
+    z2 = p.transform(p.inverse_transform(z))
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z2), rtol=1e-3,
+                               atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10**6))
+def test_recall_bounds_and_identity(seed):
+    ids = jax.random.randint(jax.random.PRNGKey(seed), (6, 10), 0, 100)
+    assert recall_at_k(ids, ids) == 1.0
+    other = ids + 1000
+    assert recall_at_k(other, ids) == 0.0
+
+
+@settings(**SETTINGS)
+@given(lo=st.floats(1e-6, 1.0), hi=st.floats(2.0, 1e4),
+       seed=st.integers(0, 10**6))
+def test_space_samples_in_bounds(lo, hi, seed):
+    rng = np.random.default_rng(seed)
+    space = (SearchSpace()
+             .add("f", Float(lo, hi, log=True))
+             .add("i", Int(2, 50, log=True))
+             .add("c", Categorical(("a", "b"))))
+    for _ in range(20):
+        s = space.sample(rng)
+        assert lo <= s["f"] <= hi
+        assert 2 <= s["i"] <= 50
+        assert s["c"] in ("a", "b")
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10**6), scale=st.floats(1e-4, 1e3))
+def test_int8_quantization_error_bound(seed, scale):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (512,)) * scale
+    q, s = _quantize_leaf(g)
+    deq = _dequantize_leaf(q, s, g.shape)
+    # per-block error <= blockmax/254 (round-to-nearest of 127 levels)
+    err = np.abs(np.asarray(deq) - np.asarray(g)).reshape(-1, 256)
+    blockmax = np.abs(np.asarray(g)).reshape(-1, 256).max(axis=1)
+    assert (err.max(axis=1) <= blockmax / 127 + 1e-6).all()
+
+
+def test_lm_causality():
+    """Changing future tokens must not change past logits."""
+    from repro.configs import get_arch
+    from repro.models import transformer as T
+    cfg = get_arch("qwen2-1.5b").smoke_config
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
+                            cfg.vocab_size)
+    t2 = t1.at[:, 8:].set((t1[:, 8:] + 7) % cfg.vocab_size)
+    l1, _ = T.forward(params, cfg, t1)
+    l2, _ = T.forward(params, cfg, t2)
+    np.testing.assert_allclose(np.asarray(l1[:, :8]), np.asarray(l2[:, :8]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_attention_block_size_invariance():
+    from repro.models.layers import chunked_sdpa
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 2, 16))
+    outs = [chunked_sdpa(q, k, v, causal=True, block_kv=b)
+            for b in (8, 16, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-3, atol=2e-3)

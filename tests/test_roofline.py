@@ -1,0 +1,88 @@
+"""Roofline analysis infrastructure: trip-count-aware HLO costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_costs import analyze_module, parse_module
+from repro.analysis.roofline import analyze
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_xla_cost_analysis_counts_scan_once():
+    """The bug this module exists for (if XLA fixes it, simplify)."""
+    def f(w, x):
+        def body(x, _):
+            return x @ w, None
+        x, _ = jax.lax.scan(body, x, None, length=8)
+        return x
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 128), jnp.float32)
+    c = _compile(f, w, x)
+    xla_flops = c.cost_analysis()["flops"]
+    assert xla_flops < 2 * 4 * 128 * 128 * 2     # body counted ~once
+
+
+@pytest.mark.parametrize("n", [1, 2, 8])
+def test_dot_flops_exact_through_scan(n):
+    def f(w, x):
+        def body(x, _):
+            return x @ w, None
+        x, _ = jax.lax.scan(body, x, None, length=n)
+        return x
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 128), jnp.float32)
+    mc = analyze_module(_compile(f, w, x).as_text())
+    expect = 2 * 4 * 128 * 128 * n
+    assert abs(mc.flops - expect) / expect < 0.05
+
+
+def test_nested_scan_flops():
+    def f(w, x):
+        def outer(x, _):
+            def inner(x, _):
+                return x @ w, None
+            x, _ = jax.lax.scan(inner, x, None, length=3)
+            return x, None
+        x, _ = jax.lax.scan(outer, x, None, length=5)
+        return x
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    mc = analyze_module(_compile(f, w, x).as_text())
+    expect = 2 * 8 * 64 * 64 * 15
+    assert abs(mc.flops - expect) / expect < 0.05
+
+
+def test_gather_bytes_not_whole_operand():
+    """A tiny gather from a huge table must not count the table."""
+    def f(table, ids):
+        return table[ids]
+    t = jax.ShapeDtypeStruct((100000, 64), jnp.float32)
+    i = jax.ShapeDtypeStruct((8,), jnp.int32)
+    mc = analyze_module(_compile(f, t, i).as_text())
+    assert mc.hbm_bytes < 100000 * 64 * 4 / 10
+
+
+def test_batched_dot_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    mc = analyze_module(_compile(f, a, b).as_text())
+    expect = 2 * 4 * 32 * 64 * 16
+    assert abs(mc.flops - expect) / expect < 0.05
+
+
+def test_roofline_report_terms_consistent():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    rep = analyze(_compile(f, a, b), arch="t", shape="s", mesh_desc="1",
+                  n_devices=1, model_flops=2 * 256**3)
+    assert abs(rep.useful_ratio - 1.0) < 0.05
+    assert rep.bottleneck in ("compute", "memory", "collective")
+    assert rep.compute_s > 0 and rep.memory_s > 0

@@ -1,0 +1,121 @@
+"""Black-box tuner tests: TPE vs Random on analytic functions, constraint
+handling, Pareto fronts, and the ANN objective's build cache."""
+import numpy as np
+import pytest
+
+from repro.core.tuning import (
+    Categorical, Float, Int, RandomSampler, SearchSpace, Study, TPESampler,
+)
+from repro.core.tuning.samplers import _nondominated_sort
+
+
+def quad_space():
+    return SearchSpace().add("x", Float(-5, 5)).add("y", Float(-5, 5))
+
+
+def test_tpe_beats_random_on_quadratic():
+    def f(t):
+        x, y = t.params["x"], t.params["y"]
+        return -(x - 2.0) ** 2 - (y + 1.0) ** 2
+
+    best_tpe, best_rnd = [], []
+    for seed in range(3):
+        s1 = Study(quad_space(), TPESampler(seed=seed, n_startup=10))
+        s1.optimize(f, n_trials=60)
+        best_tpe.append(s1.best_trial.values[0])
+        s2 = Study(quad_space(), RandomSampler(seed=seed))
+        s2.optimize(f, n_trials=60)
+        best_rnd.append(s2.best_trial.values[0])
+    assert np.mean(best_tpe) >= np.mean(best_rnd)
+    assert np.mean(best_tpe) > -0.5          # near the optimum
+
+
+def test_tpe_log_and_int_and_categorical():
+    space = (SearchSpace()
+             .add("n", Int(1, 1024, log=True))
+             .add("lr", Float(1e-5, 1.0, log=True))
+             .add("c", Categorical(("a", "b", "c"))))
+
+    def f(t):
+        n, lr, c = t.params["n"], t.params["lr"], t.params["c"]
+        bonus = {"a": 0.0, "b": 1.0, "c": 0.2}[c]
+        return -abs(np.log(n) - np.log(64)) - abs(np.log(lr) - np.log(1e-2)) \
+            + bonus
+
+    s = Study(space, TPESampler(seed=0, n_startup=8)).optimize(f, 60)
+    best = s.best_trial
+    assert 8 <= best.params["n"] <= 512
+    assert 1e-4 < best.params["lr"] < 1e-1
+    # b should dominate the good set by the end
+    late = [t.params["c"] for t in s.trials[40:]]
+    assert late.count("b") >= late.count("a")
+
+
+def test_constraint_steers_to_feasible_region():
+    """Optimum at x=5 is infeasible (x<=2 required); tuner must return
+    a feasible best."""
+    space = SearchSpace().add("x", Float(0, 5))
+
+    def f(t):
+        x = t.params["x"]
+        return {"values": x, "constraints": [x - 2.0]}
+
+    s = Study(space, TPESampler(seed=1, n_startup=8)).optimize(f, 50)
+    assert s.best_trial.feasible
+    assert s.best_trial.params["x"] <= 2.0
+    assert s.best_trial.params["x"] > 1.0    # still pushed to the boundary
+
+
+def test_multiobjective_pareto_front():
+    """Trade-off f1=x, f2=1-x: the front should span the trade-off."""
+    space = SearchSpace().add("x", Float(0, 1))
+
+    def f(t):
+        x = t.params["x"]
+        return (x, 1.0 - x)
+
+    s = Study(space, TPESampler(seed=0, n_startup=8), n_objectives=2)
+    s.optimize(f, 40)
+    front = s.pareto_front()
+    assert len(front) >= 5
+    xs = sorted(t.values[0] for t in front)
+    assert xs[0] < 0.2 and xs[-1] > 0.8
+    # front must be mutually nondominated
+    for a in front:
+        for b in front:
+            if a is not b:
+                assert not (a.values[0] >= b.values[0]
+                            and a.values[1] >= b.values[1]
+                            and a.values != b.values)
+
+
+def test_nondominated_sort_ranks():
+    class T:
+        def __init__(self, v):
+            self.values = v
+
+    ts = [T((1, 1)), T((2, 2)), T((0, 3)), T((3, 0)), T((0.5, 0.5))]
+    fronts = _nondominated_sort(ts)
+    assert ts[1] in fronts[0] and ts[2] in fronts[0] and ts[3] in fronts[0]
+    assert ts[0] in fronts[1]
+    assert ts[4] in fronts[2]
+
+
+@pytest.mark.slow
+def test_ann_objective_build_cache(ann_data):
+    from repro.core.pipeline import IndexParams
+    from repro.core.tuning import AnnObjective
+
+    base = IndexParams(pca_dim=32, graph_degree=12, build_knn_k=12,
+                       build_candidates=32, ef_search=48)
+    obj = AnnObjective(ann_data["data"], ann_data["queries"], k=10,
+                       base_params=base, qps_repeats=2)
+    r1 = obj.evaluate({"pca_dim": 24, "antihub_keep": 0.9,
+                       "ep_clusters": 4, "ef_search": 48})
+    assert not r1.cached_build
+    # same structure, different search knobs -> cached build
+    r2 = obj.evaluate({"pca_dim": 24, "antihub_keep": 0.9,
+                       "ep_clusters": 8, "ef_search": 64})
+    assert r2.cached_build
+    assert r2.build_seconds < r1.build_seconds
+    assert 0.0 <= r1.recall <= 1.0 and r1.qps > 0
