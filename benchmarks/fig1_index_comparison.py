@@ -1,5 +1,10 @@
 """Paper Fig. 1: compare FlatL2 / NSG / HNSW / IVF / PQ on recall-QPS-memory.
 
+Every row is built from a factory spec string through the unified Index API
+(`build_index`) and measured through the same search call — the benchmark
+itself has no index-specific code, which is the point of the paper's
+"off-the-shelf" premise.
+
 Expected orderings (the paper's preliminary findings):
   * graph indexes (NSG, HNSW) dominate at recall >= 0.9;
   * NSG beats brute force by a large QPS factor at recall >= 0.9;
@@ -7,57 +12,34 @@ Expected orderings (the paper's preliminary findings):
 """
 from __future__ import annotations
 
-import jax
-import numpy as np
-
 from benchmarks.common import (
     K, dataset, measure_qps, print_table, save,
 )
-from repro.core import FlatIndex, build_vanilla_nsg, recall_at_k
-from repro.core.hnsw import HNSWIndex
-from repro.core.ivf import IVFIndex
-from repro.core.pq import PQIndex
+from repro.core import SearchParams, build_index, recall_at_k
+
+# (spec, SearchParams overrides) — one line per Fig. 1 family
+SPECS = [
+    ("Flat", SearchParams()),
+    ("NSG24,EP1", SearchParams(ef_search=64)),
+    ("HNSW16,Flat", SearchParams(ef_search=64)),
+    ("IVF128,Flat", SearchParams(nprobe=8)),
+    ("PQ16", SearchParams()),
+]
 
 
 def run(n=None):
-    data, queries, ti = dataset(*( (n,) if n else () ))
+    data, queries, ti = dataset(*((n,) if n else ()))
     rows = []
-
-    flat = FlatIndex(data)
-    qps_flat = measure_qps(lambda q: flat.search(q, K), queries)
-    rows.append(["FlatL2", 1.0, f"{qps_flat:.1f}", "x1.00",
-                 data.size * 4])
-
-    nsg = build_vanilla_nsg(data, degree=24, ef_search=64, build_knn_k=24,
-                            build_candidates=48)
-    d, i = nsg.search(queries, K)
-    r = recall_at_k(i, ti)
-    qps = measure_qps(lambda q: nsg.search(q, K)[0], queries)
-    rows.append(["NSG24,Flat", round(r, 4), f"{qps:.1f}",
-                 f"x{qps / qps_flat:.2f}", nsg.memory_bytes()])
-
-    hnsw = HNSWIndex(m=16, ef_construction=48, ef_search=64).fit(data)
-    d, i = hnsw.search(queries, K)
-    r = recall_at_k(i, ti)
-    qps = measure_qps(lambda q: hnsw.search(q, K)[0], queries)
-    rows.append(["HNSW16,Flat", round(r, 4), f"{qps:.1f}",
-                 f"x{qps / qps_flat:.2f}",
-                 data.size * 4 + sum(l.size for l in hnsw.layers) * 4])
-
-    ivf = IVFIndex(n_lists=128, nprobe=8).fit(data)
-    d, i = ivf.search(queries, K)
-    r = recall_at_k(i, ti)
-    qps = measure_qps(lambda q: ivf.search(q, K)[0], queries)
-    rows.append(["IVF128,Flat(np8)", round(r, 4), f"{qps:.1f}",
-                 f"x{qps / qps_flat:.2f}",
-                 data.size * 4 + ivf.lists.size * 4])
-
-    pq = PQIndex(m=16).fit(data)
-    d, i = pq.search(queries, K)
-    r = recall_at_k(i, ti)
-    qps = measure_qps(lambda q: pq.search(q, K)[0], queries)
-    rows.append(["Flat,PQ16", round(r, 4), f"{qps:.1f}",
-                 f"x{qps / qps_flat:.2f}", pq.memory_bytes()])
+    qps_flat = None
+    for spec, params in SPECS:
+        idx = build_index(spec, data)
+        d, i = idx.search(queries, K, params)
+        r = recall_at_k(i, ti)
+        qps = measure_qps(lambda q: idx.search(q, K, params)[0], queries)
+        if qps_flat is None:        # first row is the brute-force anchor
+            qps_flat = qps
+        rows.append([spec, round(r, 4), f"{qps:.1f}",
+                     f"x{qps / qps_flat:.2f}", idx.memory_bytes()])
 
     headers = ["index", "recall@10", "QPS", "vs_flat", "mem_bytes"]
     print_table("Fig.1 index comparison", headers, rows)

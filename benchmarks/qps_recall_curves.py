@@ -1,51 +1,37 @@
 """Recall-QPS trade-off curves (the x-axes of the paper's Fig. 1/3): sweep
-`ef_search` per index family and emit (recall, QPS) points. The paper's plots
-are exactly these frontiers; JSON output is plot-ready."""
+each index family's runtime knob and emit (recall, QPS) points. With the
+unified Index API a sweep is just (factory spec, SearchParams field, values)
+— the loop below works for any registered family. JSON output is plot-ready.
+"""
 from __future__ import annotations
 
-import jax
-
 from benchmarks.common import K, dataset, measure_qps, print_table, save
-from repro.core import IndexParams, TunedGraphIndex, recall_at_k
-from repro.core.ivf import IVFIndex
-from repro.core.ivfpq import IVFPQIndex
+from repro.core import SearchParams, build_index, recall_at_k
+
+# (spec, tunable SearchParams field, sweep values)
+SWEEPS = [
+    ("NSG24,EP32", "ef_search", (16, 32, 64, 128)),
+    ("IVF128,Flat", "nprobe", (1, 4, 16, 64)),
+    ("IVFPQ64x16", "nprobe", (4, 16)),
+]
 
 
 def run():
     data, queries, ti = dataset()
-    dim = data.shape[1]
     rows = []
-
-    nsg = TunedGraphIndex(IndexParams(
-        pca_dim=dim, antihub_keep=1.0, ep_clusters=32, ef_search=64,
-        graph_degree=24, build_knn_k=24, build_candidates=48)).fit(data)
-    for ef in (16, 32, 64, 128):
-        d, i = nsg.search(queries, K, ef=ef)
-        r = recall_at_k(i, ti)
-        qps = measure_qps(lambda q: nsg.search(q, K, ef=ef)[0], queries,
-                          repeats=3)
-        rows.append([f"NSG ef={ef}", round(r, 4), f"{qps:.1f}"])
-
-    ivf = IVFIndex(n_lists=128, nprobe=1).fit(data)
-    for np_ in (1, 4, 16, 64):
-        ivf.nprobe = np_
-        d, i = ivf.search(queries, K)
-        r = recall_at_k(i, ti)
-        qps = measure_qps(lambda q: ivf.search(q, K)[0], queries, repeats=3)
-        rows.append([f"IVF128 nprobe={np_}", round(r, 4), f"{qps:.1f}"])
-
-    ivfpq = IVFPQIndex(n_lists=64, m=16, nprobe=4).fit(data)
-    for np_ in (4, 16):
-        ivfpq.nprobe = np_
-        d, i = ivfpq.search(queries, K)
-        r = recall_at_k(i, ti)
-        qps = measure_qps(lambda q: ivfpq.search(q, K)[0], queries,
-                          repeats=3)
-        rows.append([f"IVFPQ64,16 nprobe={np_}", round(r, 4), f"{qps:.1f}",
-                     f"mem {ivfpq.memory_bytes()/1e6:.1f}MB"])
+    for spec, knob, values in SWEEPS:
+        idx = build_index(spec, data)
+        assert knob in idx.search_params_space().names(), (spec, knob)
+        for v in values:
+            params = SearchParams(**{knob: v})
+            d, i = idx.search(queries, K, params)
+            r = recall_at_k(i, ti)
+            qps = measure_qps(lambda q: idx.search(q, K, params)[0],
+                              queries, repeats=3)
+            rows.append([f"{spec} {knob}={v}", round(r, 4), f"{qps:.1f}",
+                         f"mem {idx.memory_bytes()/1e6:.1f}MB"])
 
     headers = ["config", "recall@10", "QPS", ""]
-    rows = [r + [""] * (4 - len(r)) for r in rows]
     print_table("QPS-recall frontiers", headers, rows)
     save("qps_recall_curves", rows, headers)
     return rows

@@ -5,9 +5,11 @@
 import jax
 
 from repro.core import (
-    FlatIndex, IndexParams, TunedGraphIndex, build_vanilla_nsg, recall_at_k,
+    FlatIndex, IndexParams, SearchParams, build_index, recall_at_k,
 )
-from repro.core.tuning import AnnObjective, Study, TPESampler, default_space
+from repro.core.tuning import (
+    AnnObjective, SearchParamsObjective, Study, TPESampler, default_space,
+)
 from repro.data import clustered_vectors, queries_like
 
 
@@ -18,18 +20,16 @@ def main():
     queries = queries_like(jax.random.PRNGKey(1), data, 128)
     _, true_i = FlatIndex(data).search(queries, 10)
 
-    print("2) vanilla NSG baseline")
-    vanilla = build_vanilla_nsg(data, degree=16, ef_search=64,
-                                build_knn_k=16, build_candidates=32)
+    print("2) vanilla NSG baseline (factory spec 'NSG16')")
+    vanilla = build_index("NSG16", data)
     _, ids = vanilla.search(queries, 10)
     print(f"   recall@10 = {recall_at_k(ids, true_i):.4f} "
           f"(build {vanilla.build_seconds:.1f}s)")
 
-    print("3) the paper's tuned pipeline: PCA + AntiHub + entry points")
-    tuned = TunedGraphIndex(IndexParams(
-        pca_dim=48, antihub_keep=0.9, ep_clusters=32, ef_search=64,
-        graph_degree=16, build_knn_k=16, build_candidates=32)).fit(data)
-    _, ids = tuned.search(queries, 10)
+    print("3) the paper's tuned pipeline: PCA + AntiHub + entry points "
+         "('PCA48,NSG16,AH0.9,EP32')")
+    tuned = build_index("PCA48,NSG16,AH0.9,EP32", data)
+    _, ids = tuned.search(queries, 10, SearchParams(ef_search=64))
     print(f"   recall@10 = {recall_at_k(ids, true_i):.4f}  "
           f"memory {tuned.memory_bytes()/1e6:.2f}MB vs "
           f"{vanilla.memory_bytes()/1e6:.2f}MB vanilla")
@@ -50,6 +50,18 @@ def main():
     print(f"   best feasible: {best.params}")
     print(f"   recall={r.recall:.4f} qps={r.qps:.0f} "
           f"({sum(1 for _, e in obj.eval_log if e.cached_build)} cache hits)")
+
+    print("5) generic runtime tuning: same tuner, any index or factory spec")
+    # a built index (step 3's graph, no rebuild) and a spec string (IVF)
+    for label, target in (("PCA48,NSG16,AH0.9,EP32", tuned), ("IVF64", "IVF64")):
+        gobj = SearchParamsObjective(target, data, queries, k=10,
+                                     qps_repeats=2)
+        study = Study(gobj.space, TPESampler(seed=0, n_startup=3))
+        study.optimize(gobj.single_objective, n_trials=6)
+        best = study.best_trial
+        r = best.user_attrs["result"]
+        print(f"   {label:22s} best {best.params} -> "
+              f"recall={r.recall:.4f} qps={r.qps:.0f}")
 
 
 if __name__ == "__main__":

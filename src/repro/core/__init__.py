@@ -1,14 +1,19 @@
 """The paper's contribution: tuned off-the-shelf graph index.
 
 Public surface:
-    TunedGraphIndex / IndexParams  — the paper's Fig.2 pipeline
-    build_vanilla_nsg              — untuned baseline
-    FlatIndex / recall_at_k        — oracle + metric
-    beam_search                    — TPU-native graph traversal
-    tuning.Study                   — black-box parameter tuning
+    Index / SearchParams / build_index  — unified index API + factory registry
+    TunedGraphIndex / IndexParams       — the paper's Fig.2 pipeline
+    build_vanilla_nsg                   — untuned baseline
+    FlatIndex / recall_at_k             — oracle + metric
+    beam_search                         — TPU-native graph traversal
+    tuning.Study                        — black-box parameter tuning
 """
 from repro.core.beam_search import beam_search  # noqa: F401
 from repro.core.flat import FlatIndex, recall_at_k  # noqa: F401
+from repro.core.index_api import (  # noqa: F401
+    Index, PreprocessedIndex, SearchParams, build_index, list_index_specs,
+    register_index,
+)
 from repro.core.pipeline import (  # noqa: F401
     IndexParams, TunedGraphIndex, build_vanilla_nsg,
 )

@@ -20,7 +20,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.beam_search import beam_search
 from repro.core.distances import l2_topk
+from repro.core.index_api import build_index
 from repro.core.pipeline import IndexParams, TunedGraphIndex
+from repro.distributed.sharding import shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -41,7 +43,7 @@ def make_sharded_l2_topk(mesh: Mesh, k: int, chunk: int = 16384):
         d, i = l2_topk(q, db_local, k, chunk=chunk)
         return d, jnp.where(i >= 0, i + offset, -1)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         local, mesh=mesh,
         in_specs=(P(batch, None), P("model", None), P("model")),
         out_specs=(P(batch, "model"), P(batch, "model")))
@@ -114,7 +116,7 @@ def make_search_step(mesh: Mesh, *, ef: int, k: int, max_iters: int = 0,
         d = jnp.where(gi >= 0, d, jnp.inf)
         return d, gi
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         local_search, mesh=mesh,
         in_specs=(P(batch, None), P("model", None), P("model", None),
                   P("model"), P("model", None), P("model"), P("model")),
@@ -214,11 +216,119 @@ class ShardedIndex:
         )
         return self
 
-    def search(self, queries: jax.Array, k: int, *,
-               ef: Optional[int] = None, mode: str = "while"):
+    def search(self, queries: jax.Array, k: int, params=None, *,
+               ef: Optional[int] = None, mode: Optional[str] = None):
+        if params is not None:
+            ef = ef if ef is not None else params.ef_search
+            mode = mode if mode is not None else params.mode
         step = make_search_step(self.mesh, ef=ef or self.params.ef_search,
-                                k=k, mode=mode)
+                                k=k, mode=mode or "while")
         return step(queries, self.arrays)
+
+    @property
+    def ntotal(self) -> int:
+        if self.arrays is None:
+            return 0
+        return int((np.asarray(self.arrays.global_ids) >= 0).sum())
+
+    @property
+    def dim(self) -> int:
+        return 0 if self.arrays is None else self.arrays.pca_mean.shape[0]
+
+    def search_params_space(self):
+        from repro.core.index_api import ef_search_space
+        return ef_search_space()
+
+
+# ---------------------------------------------------------------------------
+# Generic sharding over the Index protocol
+# ---------------------------------------------------------------------------
+
+
+class ShardedFactoryIndex:
+    """Row-shard ANY registered index family behind the unified API.
+
+    Host-orchestrated scale-out: rows split evenly across ``n_shards``, one
+    independent sub-index per shard built from the same factory spec
+    (``build_index``), search fans the query batch out to every sub-index and
+    merges the per-shard top-k lists (size shards * k — tiny). Conforms to
+    the ``Index`` protocol itself, so sharding composes with everything else
+    (generic tuner, serve steps, benchmarks).
+
+    A ``PCA<d>`` prefix is hoisted out of the per-shard spec and fit ONCE on
+    the full dataset: per-shard projections would span different subspaces,
+    making the merged distances incomparable (a shard whose projection
+    discards more variance would win merge slots it shouldn't).
+
+    ``ShardedIndex`` above remains the SPMD fast path specialized to the
+    paper's graph pipeline; this wrapper trades one fused program for total
+    generality (IVF/PQ/HNSW/Flat shards all work).
+    """
+
+    def __init__(self, spec: str, n_shards: int = 2):
+        self.spec = spec
+        self.n_shards = n_shards
+        self.subs: list = []
+        self.offsets: Optional[np.ndarray] = None
+        self.pca = None
+        self.input_dim: int = 0
+
+    def fit(self, data: jax.Array, *, key: Optional[jax.Array] = None):
+        from repro.core.index_api import split_pca_prefix
+        from repro.core.pca import fit_pca
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.input_dim = data.shape[1]
+        pca_dim, inner_spec = split_pca_prefix(self.spec)
+        if pca_dim is not None:
+            self.pca = fit_pca(data, pca_dim)
+            data = self.pca.transform(data)
+        n = data.shape[0]
+        bounds = np.linspace(0, n, self.n_shards + 1).astype(int)
+        self.offsets = bounds[:-1]
+        self.subs = [
+            build_index(inner_spec, data[bounds[i]:bounds[i + 1]],
+                        key=jax.random.fold_in(key, i))
+            for i in range(self.n_shards)
+        ]
+        return self
+
+    def search(self, queries: jax.Array, k: int, params=None):
+        if self.pca is not None:
+            queries = self.pca.transform(queries)
+        dists, ids = [], []
+        for off, sub in zip(self.offsets, self.subs):
+            d, i = sub.search(queries, k, params)
+            dists.append(d)
+            ids.append(jnp.where(i >= 0, i + int(off), -1))
+        d = jnp.concatenate(dists, axis=1)          # (Q, shards*k)
+        i = jnp.concatenate(ids, axis=1)
+        d = jnp.where(i >= 0, d, jnp.inf)
+        nd, pos = jax.lax.top_k(-d, k)
+        return -nd, jnp.take_along_axis(i, pos, axis=1)
+
+    @property
+    def ntotal(self) -> int:
+        return sum(s.ntotal for s in self.subs)
+
+    @property
+    def dim(self) -> int:
+        return self.input_dim
+
+    def search_params_space(self):
+        # all shards share a spec, hence a knob space; pre-fit, derive it
+        # from the spec like every other conformer does
+        if self.subs:
+            return self.subs[0].search_params_space()
+        from repro.core.index_api import parse_spec
+        _, unfitted = parse_spec(self.spec, max(self.input_dim, 1))
+        return unfitted.search_params_space()
+
+    def memory_bytes(self) -> int:
+        total = sum(int(getattr(s, "memory_bytes", lambda: 0)())
+                    for s in self.subs)
+        if self.pca is not None:
+            total += (self.pca.components.size + self.pca.mean.size) * 4
+        return total
 
 
 def input_specs_for_search(cfg, batch: int, n_candidates: int,

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -11,19 +12,54 @@ from repro.core.distances import l2_topk
 
 @dataclass
 class FlatIndex:
-    data: jax.Array
+    """Exact index; conforms to the ``core.index_api.Index`` protocol.
+
+    ``FlatIndex(data)`` and ``FlatIndex().fit(data)`` are equivalent.
+    """
+    data: Optional[jax.Array] = None
+
+    def fit(self, data: jax.Array, *, key: Optional[jax.Array] = None):
+        self.data = data
+        return self
 
     @property
     def ntotal(self) -> int:
-        return self.data.shape[0]
+        return 0 if self.data is None else self.data.shape[0]
 
-    def search(self, queries: jax.Array, k: int, chunk: int = 16384):
-        """Exact (dists, ids); the oracle every other index is scored against."""
-        return l2_topk(queries, self.data, k, chunk=chunk)
+    @property
+    def dim(self) -> int:
+        return 0 if self.data is None else self.data.shape[1]
+
+    def search(self, queries: jax.Array, k: int, params=None, *,
+               chunk: Optional[int] = None):
+        """Exact (dists, ids); the oracle every other index is scored against.
+
+        An explicit ``chunk=`` keyword wins over ``params.chunk`` (same
+        precedence as the other families' ``ef=``/``mode=`` overrides).
+        """
+        if chunk is None and params is not None:
+            chunk = params.chunk
+        return l2_topk(queries, self.data, k, chunk=chunk or 16384)
+
+    def search_params_space(self):
+        # exact search always has recall 1.0; chunk is its one (QPS-only)
+        # runtime knob, tunable through the generic path like any other
+        from repro.core.tuning.space import Int, SearchSpace
+        return SearchSpace().add("chunk", Int(1024, 65536, log=True))
+
+    def memory_bytes(self) -> int:
+        return int(self.data.size * self.data.dtype.itemsize)
 
 
 def recall_at_k(pred_ids: jax.Array, true_ids: jax.Array) -> float:
-    """Paper's Recall@k = |R ∩ R_hat| / k, averaged over queries."""
-    hits = (pred_ids[:, :, None] == true_ids[:, None, :]).any(-1)
+    """Paper's Recall@k = |R ∩ R_hat| / k, averaged over queries.
+
+    k is the number of *requested* neighbors (pred columns). The oracle may
+    supply more columns than k (they are distance-ascending): only its first
+    k count as R, so a wider oracle inflates neither numerator nor
+    denominator.
+    """
+    k = pred_ids.shape[1]
+    hits = (pred_ids[:, :, None] == true_ids[:, None, :k]).any(-1)
     valid = pred_ids >= 0
-    return float(jnp.mean(jnp.sum(hits & valid, axis=1) / true_ids.shape[1]))
+    return float(jnp.mean(jnp.sum(hits & valid, axis=1) / k))

@@ -31,7 +31,9 @@ class HNSWIndex:
         self.data: Optional[np.ndarray] = None
 
     # -- build (host, sequential greedy insert) ---------------------------
-    def fit(self, data: jax.Array):
+    def fit(self, data: jax.Array, *, key=None):
+        # key accepted for Index-protocol uniformity; build randomness comes
+        # from the constructor's seed-ed generator.
         x = np.asarray(data, np.float32)
         n = x.shape[0]
         self.data = x
@@ -124,9 +126,27 @@ class HNSWIndex:
         order = np.argsort(d)
         return [int(cands[j]) for j in order[:deg]]
 
+    @property
+    def ntotal(self) -> int:
+        return 0 if self.data is None else self.data.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return 0 if self.data is None else self.data.shape[1]
+
+    def search_params_space(self):
+        from repro.core.index_api import ef_search_space
+        return ef_search_space()
+
+    def memory_bytes(self) -> int:
+        return int(self.data.size * 4
+                   + sum(layer.size for layer in self.layers) * 4)
+
     # -- search (device, batched layer-0 beam) -----------------------------
-    def search(self, queries: jax.Array, k: int,
+    def search(self, queries: jax.Array, k: int, params=None, *,
                ef: Optional[int] = None):
+        if ef is None and params is not None:
+            ef = params.ef_search
         ef = ef or self.ef_s
         qn = np.asarray(queries, np.float32)
         entries = np.empty(qn.shape[0], np.int32)

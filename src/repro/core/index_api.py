@@ -1,0 +1,357 @@
+"""Unified ``Index`` protocol + faiss-style factory registry.
+
+The paper tunes *off-the-shelf* indexes behind a uniform surface: a factory
+string ("IVF512,Flat", "HNSW32,Flat") picks the index, a preprocessing
+dimension d' shrinks the vectors, and the tuner only ever sees opaque knobs.
+This module is that surface for our JAX indexes:
+
+  * ``Index`` — the structural protocol every index family implements:
+    ``fit(data, *, key)``, ``search(queries, k, params)``, ``ntotal``,
+    ``dim``, and ``search_params_space()`` (the index's tunable runtime
+    knobs as a ``tuning.space.SearchSpace`` fragment).
+
+  * ``SearchParams`` — one frozen pytree-dataclass holding every *runtime*
+    search hyperparameter (``ef_search``, ``nprobe``, beam ``mode``,
+    ``chunk``). All fields are static metadata, so a ``SearchParams`` can
+    cross a ``jax.jit`` boundary as a hashable static argument and be
+    re-tuned without refitting — exactly the property the paper's QPS/recall
+    sweeps rely on. Unset fields (``None``) fall back to the index's own
+    defaults.
+
+  * ``build_index(spec, data)`` — the factory. ``spec`` is a comma-separated
+    string mirroring faiss: an optional ``PCA<d>`` preprocessing prefix
+    composed with any registered index component, e.g. ``"Flat"``,
+    ``"PCA16,IVF64"``, ``"IVF64,PQ8"``, ``"IVFPQ64x8"``, ``"HNSW32,Flat"``,
+    ``"NSG32,AH0.9,EP16"``. New families plug in via ``register_index``
+    instead of forking the tuner/serving/benchmark code.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import (
+    TYPE_CHECKING, Any, Callable, Dict, Optional, Protocol, Tuple,
+    runtime_checkable,
+)
+
+import jax
+
+from repro.core.pca import PCA, fit_pca
+
+if TYPE_CHECKING:   # annotation-only: a runtime import would cycle through
+    from repro.core.tuning.space import SearchSpace  # tuning/__init__
+
+
+# ---------------------------------------------------------------------------
+# SearchParams
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SearchParams:
+    """Runtime search knobs, uniform across index families.
+
+    ``None`` means "use the index's configured default". Registered as a
+    pytree with metadata-only fields: hashable, jit-static, tunable without
+    refit.
+
+    Which index reads what:
+      * ``ef_search`` — beam width: HNSW, NSG/TunedGraph
+      * ``nprobe``    — probed inverted lists: IVF, IVF-PQ
+      * ``mode``      — graph traversal loop form ("while" | "fori")
+      * ``chunk``     — brute-force streaming block: Flat
+    """
+    ef_search: Optional[int] = None
+    nprobe: Optional[int] = None
+    mode: Optional[str] = None
+    chunk: Optional[int] = None
+
+    def resolve(self, name: str, default):
+        v = getattr(self, name)
+        return default if v is None else v
+
+
+# Every field is shape-determining metadata, not a traced array: register
+# the dataclass as an empty pytree so jit treats a SearchParams argument as
+# hashable static structure (a params change recompiles, never retraces).
+jax.tree_util.register_dataclass(
+    SearchParams, data_fields=[],
+    meta_fields=["ef_search", "nprobe", "mode", "chunk"])
+
+
+def param_or(params: Optional[SearchParams], name: str, default):
+    """``params.name`` if set, else ``default`` — tolerant of ``params=None``."""
+    if params is None:
+        return default
+    return params.resolve(name, default)
+
+
+# Shared space fragments (lazy tuning.space import: see _ensure_builtins).
+# Index families delegate here so knob ranges stay in one place.
+
+
+def ef_search_space(low: int = 16, high: int = 256) -> "SearchSpace":
+    """Beam-width fragment shared by the graph indexes (HNSW, NSG, sharded)."""
+    from repro.core.tuning.space import Int, SearchSpace
+    return SearchSpace().add("ef_search", Int(low, high, log=True))
+
+
+def nprobe_space(n_lists: int) -> "SearchSpace":
+    """Probed-lists fragment shared by the IVF family."""
+    from repro.core.tuning.space import Int, SearchSpace
+    return SearchSpace().add("nprobe", Int(1, n_lists, log=True))
+
+
+def empty_space() -> "SearchSpace":
+    """For families with no runtime knob (Flat, PQ)."""
+    from repro.core.tuning.space import SearchSpace
+    return SearchSpace()
+
+
+# ---------------------------------------------------------------------------
+# The protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Index(Protocol):
+    """Structural interface every index family conforms to."""
+
+    def fit(self, data: jax.Array, *, key: Optional[jax.Array] = None):
+        """Build from (N, D) vectors; returns self."""
+        ...
+
+    def search(self, queries: jax.Array, k: int,
+               params: Optional[SearchParams] = None):
+        """(Q, D) queries -> ((Q, k) dists, (Q, k) database ids)."""
+        ...
+
+    @property
+    def ntotal(self) -> int:
+        ...
+
+    @property
+    def dim(self) -> int:
+        """Dimensionality of the vectors the index accepts at query time."""
+        ...
+
+    def search_params_space(self) -> SearchSpace:
+        """This index's tunable SearchParams fields as a space fragment."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Factory registry
+# ---------------------------------------------------------------------------
+
+# build(match, rest_tokens, dim) -> (unfitted index, n_extra_tokens_consumed)
+FactoryFn = Callable[[re.Match, Tuple[str, ...], int], Tuple[Any, int]]
+
+
+@dataclass(frozen=True)
+class IndexFactory:
+    name: str
+    pattern: "re.Pattern[str]"
+    build: FactoryFn
+    grammar: str
+
+
+_REGISTRY: Dict[str, IndexFactory] = {}
+_PCA_TOKEN = re.compile(r"^PCA(\d+)$")
+
+
+def register_index(name: str, pattern: str, grammar: str = ""):
+    """Decorator: register a factory for spec tokens matching ``pattern``.
+
+    The decorated fn receives (regex match for the head token, the remaining
+    tokens, the post-preprocessing dimensionality) and returns the unfitted
+    index plus how many extra tokens it consumed.
+    """
+    def deco(fn: FactoryFn) -> FactoryFn:
+        _REGISTRY[name] = IndexFactory(name, re.compile(pattern), fn,
+                                       grammar or pattern)
+        return fn
+    return deco
+
+
+def list_index_specs() -> Dict[str, str]:
+    """Registered component name -> grammar (for error messages / docs)."""
+    _ensure_builtins()
+    return {f.name: f.grammar for f in _REGISTRY.values()}
+
+
+def split_pca_prefix(spec: str) -> Tuple[Optional[int], str]:
+    """Split a factory string -> (pca_dim or None, inner spec string).
+
+    The one place the PCA-prefix grammar lives: parse_spec and wrappers that
+    hoist the projection (ShardedFactoryIndex) both use it.
+    """
+    tokens = [t.strip() for t in spec.split(",") if t.strip()]
+    if not tokens:
+        raise ValueError(f"empty index spec {spec!r}")
+    m = _PCA_TOKEN.match(tokens[0])
+    if m:
+        if len(tokens) == 1:
+            raise ValueError(f"spec {spec!r} has a PCA prefix but no index")
+        return int(m.group(1)), ",".join(tokens[1:])
+    return None, ",".join(tokens)
+
+
+def parse_spec(spec: str, dim: int) -> Tuple[Optional[int], Any]:
+    """Parse a factory string -> (pca_dim or None, unfitted index)."""
+    _ensure_builtins()
+    pca_dim, inner = split_pca_prefix(spec)
+    tokens = inner.split(",")
+    inner_dim = pca_dim if pca_dim is not None else dim
+    head, rest = tokens[0], tuple(tokens[1:])
+    for fac in _REGISTRY.values():
+        m = fac.pattern.match(head)
+        if m:
+            index, used = fac.build(m, rest, inner_dim)
+            leftover = rest[used:]
+            if leftover:
+                raise ValueError(
+                    f"unrecognized trailing tokens {list(leftover)} in "
+                    f"spec {spec!r}")
+            return pca_dim, index
+    raise ValueError(
+        f"no registered index matches {head!r}; known components: "
+        f"{list_index_specs()}")
+
+
+def build_index(spec: str, data: jax.Array, *,
+                key: Optional[jax.Array] = None) -> Index:
+    """Build + fit an index from a factory string (the one-call entry point).
+
+    >>> idx = build_index("PCA16,IVF64", data)
+    >>> dists, ids = idx.search(queries, 10, SearchParams(nprobe=4))
+    """
+    pca_dim, index = parse_spec(spec, data.shape[1])
+    if pca_dim is not None:
+        index = PreprocessedIndex(pca_dim, index)
+    index = index.fit(data, key=key)
+    index.spec = spec
+    return index
+
+
+# ---------------------------------------------------------------------------
+# Preprocessing composition (the paper's d' knob, for arbitrary inner indexes)
+# ---------------------------------------------------------------------------
+
+
+class PreprocessedIndex:
+    """PCA transform composed with any inner index (spec prefix ``PCA<d>``).
+
+    Fits the projection on the database, fits the inner index in the reduced
+    space, and projects queries on the way in — ids and distances come back
+    from the inner index (distances are therefore in the projected space,
+    like the paper's d'-reduced search).
+    """
+
+    def __init__(self, pca_dim: int, inner):
+        self.pca_dim = pca_dim
+        self.inner = inner
+        self.pca: Optional[PCA] = None
+        self.input_dim: Optional[int] = None
+
+    def fit(self, data: jax.Array, *, key: Optional[jax.Array] = None):
+        self.input_dim = data.shape[1]
+        self.pca = fit_pca(data, self.pca_dim)
+        self.inner.fit(self.pca.transform(data), key=key)
+        return self
+
+    def search(self, queries: jax.Array, k: int,
+               params: Optional[SearchParams] = None):
+        return self.inner.search(self.pca.transform(queries), k, params)
+
+    @property
+    def ntotal(self) -> int:
+        return self.inner.ntotal
+
+    @property
+    def dim(self) -> int:
+        return self.input_dim if self.input_dim is not None else self.pca_dim
+
+    def search_params_space(self) -> SearchSpace:
+        return self.inner.search_params_space()
+
+    def memory_bytes(self) -> int:
+        total = (self.pca.components.size + self.pca.mean.size) * 4 \
+            if self.pca is not None else 0
+        inner_mem = getattr(self.inner, "memory_bytes", None)
+        return int(total + (inner_mem() if inner_mem else 0))
+
+
+# ---------------------------------------------------------------------------
+# Built-in component factories
+# ---------------------------------------------------------------------------
+# Registration is lazy (first parse triggers it) so the index modules can
+# import index_api helpers (param_or, SearchParams) without an import cycle.
+
+
+_builtins_registered = False
+
+
+def _ensure_builtins():
+    global _builtins_registered
+    if _builtins_registered:
+        return
+    from repro.core.flat import FlatIndex
+    from repro.core.hnsw import HNSWIndex
+    from repro.core.ivf import IVFIndex
+    from repro.core.ivfpq import IVFPQIndex
+    from repro.core.pipeline import IndexParams, TunedGraphIndex
+    from repro.core.pq import PQIndex
+
+    @register_index("Flat", r"^Flat$", "Flat")
+    def _flat(m, rest, dim):
+        return FlatIndex(), 0
+
+    @register_index("IVFPQ", r"^IVFPQ(\d+)x(\d+)$", "IVFPQ<nlists>x<m>")
+    def _ivfpq(m, rest, dim):
+        return IVFPQIndex(n_lists=int(m.group(1)), m=int(m.group(2))), 0
+
+    @register_index("IVF", r"^IVF(\d+)$",
+                    "IVF<nlists>[,Flat] | IVF<nlists>,PQ<m>")
+    def _ivf(m, rest, dim):
+        n_lists = int(m.group(1))
+        if rest:
+            pq = re.match(r"^PQ(\d+)$", rest[0])
+            if pq:
+                return IVFPQIndex(n_lists=n_lists, m=int(pq.group(1))), 1
+            if rest[0] == "Flat":
+                return IVFIndex(n_lists=n_lists), 1
+        return IVFIndex(n_lists=n_lists), 0
+
+    @register_index("PQ", r"^PQ(\d+)$", "PQ<m>")
+    def _pq(m, rest, dim):
+        return PQIndex(m=int(m.group(1))), 0
+
+    @register_index("HNSW", r"^HNSW(\d+)$", "HNSW<m>[,Flat]")
+    def _hnsw(m, rest, dim):
+        used = 1 if rest and rest[0] == "Flat" else 0
+        return HNSWIndex(m=int(m.group(1))), used
+
+    @register_index("NSG", r"^NSG(\d+)?$", "NSG[<degree>][,AH<keep>][,EP<k>]")
+    def _nsg(m, rest, dim):
+        degree = int(m.group(1)) if m.group(1) else 32
+        ep, keep, used = 1, 1.0, 0
+        for tok in rest:
+            em = re.match(r"^EP(\d+)$", tok)
+            ah = re.match(r"^AH(0\.\d+|1(?:\.0+)?)$", tok)
+            if em:
+                ep = int(em.group(1))
+            elif ah:
+                keep = float(ah.group(1))
+            else:
+                break
+            used += 1
+        params = IndexParams(
+            pca_dim=dim, antihub_keep=keep, ep_clusters=ep,
+            graph_degree=degree, build_knn_k=degree,
+            build_candidates=max(2 * degree, 48))
+        return TunedGraphIndex(params), used
+
+    # only flag success: a failure above must surface again on retry, not
+    # leave the process stuck with an empty registry
+    _builtins_registered = True

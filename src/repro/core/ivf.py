@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distances import l2_topk, pairwise_sqdist
+from repro.core.index_api import param_or
 from repro.core.kmeans import kmeans
 
 
@@ -24,7 +25,7 @@ class IVFIndex:
         self.lists: Optional[jax.Array] = None     # (n_lists, cap) ids, -1 pad
         self.data: Optional[jax.Array] = None
 
-    def fit(self, data: jax.Array, key: Optional[jax.Array] = None,
+    def fit(self, data: jax.Array, *, key: Optional[jax.Array] = None,
             iters: int = 10):
         key = key if key is not None else jax.random.PRNGKey(0)
         self.data = data
@@ -40,9 +41,26 @@ class IVFIndex:
         self.lists = jnp.asarray(lists)
         return self
 
-    def search(self, queries: jax.Array, k: int):
+    def search(self, queries: jax.Array, k: int, params=None):
+        nprobe = min(param_or(params, "nprobe", self.nprobe), self.n_lists)
         return _ivf_search(queries, self.data, self.centroids, self.lists,
-                           k, self.nprobe)
+                           k, nprobe)
+
+    @property
+    def ntotal(self) -> int:
+        return 0 if self.data is None else self.data.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return 0 if self.data is None else self.data.shape[1]
+
+    def search_params_space(self):
+        from repro.core.index_api import nprobe_space
+        return nprobe_space(self.n_lists)
+
+    def memory_bytes(self) -> int:
+        return int(self.data.size * self.data.dtype.itemsize
+                   + self.lists.size * 4 + self.centroids.size * 4)
 
 
 import functools  # noqa: E402

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distances import pairwise_sqdist
+from repro.core.index_api import param_or
 from repro.core.kmeans import kmeans
 from repro.core.pq import PQIndex
 
@@ -27,17 +28,19 @@ class IVFPQIndex:
         self.lists: Optional[jax.Array] = None       # (L, cap) ids
         self.list_codes: Optional[jax.Array] = None  # (L, cap, M) codes
         self.pq: Optional[PQIndex] = None
+        self._shape = (0, 0)                         # (N, D) set by fit
 
-    def fit(self, data: jax.Array, key: Optional[jax.Array] = None,
+    def fit(self, data: jax.Array, *, key: Optional[jax.Array] = None,
             iters: int = 8):
         key = key if key is not None else jax.random.PRNGKey(0)
         n, d = data.shape
+        self._shape = (n, d)
         km = kmeans(key, data, self.n_lists, iters=iters)
         self.centroids = km.centroids
         # PQ on residuals (classic IVFADC)
         residual = data - km.centroids[km.assignments]
         self.pq = PQIndex(m=self.m).fit(residual,
-                                        jax.random.fold_in(key, 1),
+                                        key=jax.random.fold_in(key, 1),
                                         iters=iters)
         assign = np.asarray(km.assignments)
         cap = max(int(np.bincount(assign, minlength=self.n_lists).max()), 1)
@@ -53,10 +56,23 @@ class IVFPQIndex:
         self.list_codes = jnp.asarray(codes)
         return self
 
-    def search(self, queries: jax.Array, k: int):
+    def search(self, queries: jax.Array, k: int, params=None):
+        nprobe = min(param_or(params, "nprobe", self.nprobe), self.n_lists)
         return _ivfpq_search(queries, self.centroids, self.lists,
                              self.list_codes, self.pq.codebooks, k,
-                             self.nprobe)
+                             nprobe)
+
+    @property
+    def ntotal(self) -> int:
+        return 0 if self.lists is None else self._shape[0]
+
+    @property
+    def dim(self) -> int:
+        return 0 if self.lists is None else self._shape[1]
+
+    def search_params_space(self):
+        from repro.core.index_api import nprobe_space
+        return nprobe_space(self.n_lists)
 
     def memory_bytes(self) -> int:
         return int(self.lists.size * 4 + self.list_codes.size

@@ -52,6 +52,7 @@ class TunedGraphIndex:
         self.graph: Optional[NSGGraph] = None
         self.eps: Optional[EntryPointSelector] = None
         self.build_seconds: float = 0.0
+        self.input_dim: int = 0
 
     # -- build ------------------------------------------------------------
     def fit(self, data: jax.Array, key: Optional[jax.Array] = None):
@@ -59,6 +60,7 @@ class TunedGraphIndex:
         key = key if key is not None else jax.random.PRNGKey(0)
         p = self.params
         n, d0 = data.shape
+        self.input_dim = d0
 
         if p.antihub_keep < 1.0:
             self.kept_idx = antihub_mod.antihub_keep_indices(
@@ -87,11 +89,19 @@ class TunedGraphIndex:
     def project(self, queries: jax.Array) -> jax.Array:
         return self.pca.transform(queries) if self.pca is not None else queries
 
-    def search(self, queries: jax.Array, k: int, *,
-               ef: Optional[int] = None, mode: str = "while"):
-        """Returns (dists (Q,k) in projected space, original ids (Q,k))."""
+    def search(self, queries: jax.Array, k: int, params=None, *,
+               ef: Optional[int] = None, mode: Optional[str] = None):
+        """Returns (dists (Q,k) in projected space, original ids (Q,k)).
+
+        ``params`` is a ``core.index_api.SearchParams``; explicit ``ef=`` /
+        ``mode=`` keywords win over it, both fall back to fit-time defaults.
+        """
         assert self.graph is not None, "fit() first"
+        if params is not None:
+            ef = ef if ef is not None else params.ef_search
+            mode = mode if mode is not None else params.mode
         ef = ef or self.params.ef_search
+        mode = mode or "while"
         q = self.project(queries)
         entries = self.eps.select(q)
         d, i, hops = beam_search(q, self.base, self.graph.neighbors, entries,
@@ -102,6 +112,15 @@ class TunedGraphIndex:
     @property
     def ntotal(self) -> int:
         return 0 if self.base is None else self.base.shape[0]
+
+    @property
+    def dim(self) -> int:
+        """Query-time input dimensionality (pre-PCA original space)."""
+        return self.input_dim
+
+    def search_params_space(self):
+        from repro.core.index_api import ef_search_space
+        return ef_search_space()
 
     def memory_bytes(self) -> int:
         """Index footprint: vectors + graph + entry-point structures."""

@@ -23,7 +23,7 @@ class PQIndex:
         self.codebooks: Optional[jax.Array] = None   # (M, 256, dsub)
         self.codes: Optional[jax.Array] = None       # (N, M) uint8
 
-    def fit(self, data: jax.Array, key: Optional[jax.Array] = None,
+    def fit(self, data: jax.Array, *, key: Optional[jax.Array] = None,
             iters: int = 8):
         key = key if key is not None else jax.random.PRNGKey(0)
         n, d = data.shape
@@ -40,8 +40,22 @@ class PQIndex:
         self.codes = jnp.stack(codes, axis=1)
         return self
 
-    def search(self, queries: jax.Array, k: int):
+    def search(self, queries: jax.Array, k: int, params=None):
         return _pq_search(queries, self.codebooks, self.codes, k)
+
+    @property
+    def ntotal(self) -> int:
+        return 0 if self.codes is None else self.codes.shape[0]
+
+    @property
+    def dim(self) -> int:
+        if self.codebooks is None:
+            return 0
+        return self.codebooks.shape[0] * self.codebooks.shape[2]
+
+    def search_params_space(self):
+        from repro.core.index_api import empty_space
+        return empty_space()    # ADC scan is exhaustive; no runtime knob
 
     def memory_bytes(self) -> int:
         return int(self.codes.size * 1 + self.codebooks.size * 4)

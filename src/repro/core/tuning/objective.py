@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core.entry_points import fit_entry_points
 from repro.core.flat import FlatIndex, recall_at_k
+from repro.core.index_api import Index, SearchParams, build_index
 from repro.core.pipeline import IndexParams, TunedGraphIndex
 from repro.core.tuning.space import Float, Int, SearchSpace
 from repro.core.tuning.study import Trial
@@ -127,3 +128,63 @@ class AnnObjective:
             cons.append((r.mem_bytes - self.mem_limit) / self.mem_limit)
         trial.user_attrs["result"] = r
         return {"values": (r.qps, r.recall), "constraints": cons}
+
+
+class SearchParamsObjective:
+    """Index-agnostic runtime tuning: optimize ``SearchParams`` for ANY
+    ``Index``-protocol conformer, with zero index-specific branches.
+
+    The search space comes from ``index.search_params_space()`` (each family
+    declares its own knobs — nprobe for IVF, ef_search for graphs); a trial's
+    params become one ``SearchParams``, and the same evaluate path measures
+    recall + QPS whatever is behind the interface. Pass either a built index
+    or a factory spec string ("IVF64", "PCA16,HNSW32", ...).
+    """
+
+    def __init__(self, index, data, queries, k: int = 10,
+                 recall_floor: float = 0.9, qps_repeats: int = 3,
+                 key: Optional[jax.Array] = None):
+        if isinstance(index, str):
+            index = build_index(index, data, key=key)
+        self.index: Index = index
+        self.queries = queries
+        self.k = k
+        self.recall_floor = recall_floor
+        self.qps_repeats = qps_repeats
+        _, self.true_i = FlatIndex(data).search(queries, k)
+        self.eval_log: list = []
+
+    @property
+    def space(self) -> SearchSpace:
+        return self.index.search_params_space()
+
+    def evaluate(self, params: Dict) -> EvalResult:
+        sp = SearchParams(**params)
+        d, i = self.index.search(self.queries, self.k, sp)  # warmup+compile
+        jax.block_until_ready(d)
+        times = []
+        for _ in range(self.qps_repeats):
+            t1 = time.perf_counter()
+            d, i = self.index.search(self.queries, self.k, sp)
+            jax.block_until_ready(d)
+            times.append(time.perf_counter() - t1)
+        qps = self.queries.shape[0] / float(np.median(times))
+        mem = getattr(self.index, "memory_bytes", None)
+        res = EvalResult(recall=recall_at_k(i, self.true_i), qps=qps,
+                         build_seconds=0.0, mem_bytes=mem() if mem else 0,
+                         cached_build=True)
+        self.eval_log.append((dict(params), res))
+        return res
+
+    def single_objective(self, trial: Trial) -> dict:
+        """maximize QPS  s.t.  Recall@k >= floor."""
+        r = self.evaluate(trial.params)
+        trial.user_attrs["result"] = r
+        return {"values": r.qps,
+                "constraints": [self.recall_floor - r.recall]}
+
+    def multi_objective(self, trial: Trial) -> dict:
+        """maximize (QPS, Recall@k)."""
+        r = self.evaluate(trial.params)
+        trial.user_attrs["result"] = r
+        return {"values": (r.qps, r.recall)}

@@ -2,7 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b
     PYTHONPATH=src python -m repro.launch.serve --arch two-tower-retrieval
-    PYTHONPATH=src python -m repro.launch.serve --arch ann-laion
+    PYTHONPATH=src python -m repro.launch.serve --arch ann-laion \
+        --spec "PCA32,NSG16,EP16" --ef 48
+
+The ANN family is served purely from a factory spec string — any index the
+registry knows ("Flat", "IVF128", "IVFPQ64x16", "HNSW32", "NSG32,EP16", with
+an optional "PCA<d>," prefix) drops in with no code changes.
 """
 from __future__ import annotations
 
@@ -17,7 +22,7 @@ from repro.configs import get_arch, list_archs
 from repro.data import clustered_vectors, lm_batch, queries_like, recsys_batch
 from repro.models import recsys, transformer
 from repro.serve.serve_step import (
-    lm_decode_step, lm_prefill_step, recsys_retrieval_step,
+    ann_search_step, lm_decode_step, lm_prefill_step, recsys_retrieval_step,
     recsys_score_step,
 )
 
@@ -27,6 +32,10 @@ def main():
     ap.add_argument("--arch", required=True, choices=list_archs())
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--spec", default="PCA32,NSG16,EP16",
+                    help="ANN factory spec string (ann family only)")
+    ap.add_argument("--ef", type=int, default=48,
+                    help="SearchParams.ef_search override (ann family only)")
     args = ap.parse_args()
     spec = get_arch(args.arch)
     cfg = spec.smoke_config
@@ -63,20 +72,19 @@ def main():
               f"(mean {float(np.mean(np.asarray(s))):.4f}); retrieval "
               f"top5 ids {np.asarray(ids)}")
     elif spec.family == "ann":
-        from repro.core import FlatIndex, IndexParams, TunedGraphIndex, \
+        from repro.core import FlatIndex, SearchParams, build_index, \
             recall_at_k
         data = clustered_vectors(key, 4000, 48, n_clusters=16)
         queries = queries_like(jax.random.PRNGKey(1), data, args.batch * 16)
-        idx = TunedGraphIndex(IndexParams(
-            pca_dim=32, antihub_keep=0.9, ep_clusters=16, ef_search=48,
-            graph_degree=16, build_knn_k=16,
-            build_candidates=32)).fit(data)
+        idx = build_index(args.spec, data, key=key)
+        step = ann_search_step(idx, k=10,
+                               params=SearchParams(ef_search=args.ef))
         _, ti = FlatIndex(data).search(queries, 10)
         t0 = time.perf_counter()
-        _, ids = idx.search(queries, 10)
+        _, ids = step(queries)
         jax.block_until_ready(ids)
         dt = time.perf_counter() - t0
-        print(f"ann-laion: {queries.shape[0] / dt:.0f} QPS, "
+        print(f"ann-laion [{args.spec}]: {queries.shape[0] / dt:.0f} QPS, "
               f"recall@10={recall_at_k(ids, ti):.4f}")
     else:
         raise SystemExit("gnn serving = scoring; use launch/train.py")

@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.tune --n 2000 --dim 64 \
         --trials 15 --mode multi
+
+Pass ``--spec`` to tune a factory-built off-the-shelf index instead of the
+paper's full pipeline: the space then comes from the index's own
+``search_params_space()`` and the same Study drives it, whatever the family:
+
+    PYTHONPATH=src python -m repro.launch.tune --spec "IVF128,Flat" --trials 10
 """
 from __future__ import annotations
 
@@ -11,7 +17,9 @@ import json
 import jax
 
 from repro.core import FlatIndex, IndexParams
-from repro.core.tuning import AnnObjective, Study, TPESampler, default_space
+from repro.core.tuning import (
+    AnnObjective, SearchParamsObjective, Study, TPESampler, default_space,
+)
 from repro.data import clustered_vectors, queries_like
 
 
@@ -25,16 +33,25 @@ def main():
     ap.add_argument("--recall-floor", type=float, default=0.9)
     ap.add_argument("--timeout", type=float, default=None)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--spec", default=None,
+                    help="factory spec: tune SearchParams for this index "
+                         "instead of the pipeline's build knobs")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
     data = clustered_vectors(key, args.n, args.dim, n_clusters=32)
     queries = queries_like(jax.random.PRNGKey(1), data, args.queries)
-    base = IndexParams(pca_dim=args.dim, graph_degree=16, build_knn_k=16,
-                       build_candidates=32, ef_search=64)
-    obj = AnnObjective(data, queries, k=10, base_params=base,
-                       recall_floor=args.recall_floor, qps_repeats=3)
-    space = default_space(args.dim, args.n)
+    if args.spec:
+        obj = SearchParamsObjective(args.spec, data, queries, k=10,
+                                    recall_floor=args.recall_floor,
+                                    qps_repeats=3, key=key)
+        space = obj.space
+    else:
+        base = IndexParams(pca_dim=args.dim, graph_degree=16, build_knn_k=16,
+                           build_candidates=32, ef_search=64)
+        obj = AnnObjective(data, queries, k=10, base_params=base,
+                           recall_floor=args.recall_floor, qps_repeats=3)
+        space = default_space(args.dim, args.n)
 
     if args.mode == "single":
         study = Study(space, TPESampler(seed=0, n_startup=5))

@@ -3,12 +3,24 @@ dry-run cells lower, and what the serving examples run."""
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import recsys, transformer
+
+
+def ann_search_step(index, k: int = 10, params=None) -> Callable:
+    """Serve cell for ANY ``core.index_api.Index`` conformer.
+
+    The index is baked into the closure (weights-as-constants, like the LM
+    cells bake cfg); ``params`` is a ``SearchParams`` frozen at step-build
+    time so the jitted search underneath sees static knobs.
+    """
+    def step(queries):
+        return index.search(queries, k, params)
+    return step
 
 
 def lm_prefill_step(cfg) -> Callable:

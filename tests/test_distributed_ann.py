@@ -52,7 +52,10 @@ MULTI = textwrap.dedent("""
     _, ti = FlatIndex(data).search(queries, 10)
 
     mesh = make_host_mesh(data=2, model=4)
-    params = IndexParams(pca_dim=20, antihub_keep=0.95, ep_clusters=4,
+    # pca_dim 22/24: aggressive enough to exercise the projection path, but
+    # the exact-in-projected-space recall ceiling at pca_dim=20 (~0.86 under
+    # this jax version's eigh) leaves no headroom for the 0.85 floor
+    params = IndexParams(pca_dim=22, antihub_keep=0.95, ep_clusters=4,
                          ef_search=48, graph_degree=12, build_knn_k=12,
                          build_candidates=32)
     idx = ShardedIndex(params, mesh).fit(data)
