@@ -18,6 +18,7 @@ from repro.core import FlatIndex
 from repro.data import clustered_vectors, queries_like
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # Bench scale: large enough for real graph structure, small enough for the
 # single CPU core. The paper's 300K/10M/30M runs use the same code paths.
@@ -53,6 +54,25 @@ def save(name: str, rows, headers=None):
     with open(path, "w") as f:
         json.dump({"rows": rows, "headers": headers}, f, indent=1,
                   default=str)
+    return path
+
+
+def save_bench_json(name: str, payload: Dict) -> str:
+    """Write ``BENCH_<name>.json`` at the repo root — the perf trajectory.
+
+    Unlike ``save`` (per-run tables under benchmarks/results/), these land
+    at a fixed path so successive commits accumulate a comparable history
+    (CI uploads them as artifacts). ``payload`` should carry the dataset
+    scale alongside the numbers: absolute QPS on one machine is only
+    comparable to itself.
+    """
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    meta = {
+        "backend": jax.default_backend(),
+        "dataset": {"n": N_DB, "dim": DIM, "n_queries": N_QUERIES, "k": K},
+    }
+    with open(path, "w") as f:
+        json.dump({**meta, **payload}, f, indent=1, default=str)
     return path
 
 

@@ -1,40 +1,65 @@
 """Recall-QPS trade-off curves (the x-axes of the paper's Fig. 1/3): sweep
 each index family's runtime knob and emit (recall, QPS) points. With the
 unified Index API a sweep is just (factory spec, SearchParams field, values)
-— the loop below works for any registered family. JSON output is plot-ready.
+— the loop below works for any registered family.
+
+Output lands twice: a plot-ready table under benchmarks/results/, and
+``BENCH_qps.json`` at the repo root — the accumulating perf trajectory that
+CI uploads per commit, so QPS tuning claims are checked against history
+instead of vibes. Scale via BENCH_N / BENCH_DIM / BENCH_Q env vars (the CI
+bench-smoke runs a tiny instance of exactly this file).
 """
 from __future__ import annotations
 
-from benchmarks.common import K, dataset, measure_qps, print_table, save
+import os
+
+from benchmarks.common import (
+    K, dataset, measure_qps, print_table, save, save_bench_json,
+)
 from repro.core import SearchParams, build_index, recall_at_k
 
-# (spec, tunable SearchParams field, sweep values)
+# (spec, tunable SearchParams field, sweep values). HNSW's sequential host
+# build dominates at large BENCH_N; skip it above the cutoff so full-scale
+# NSG/IVF sweeps don't wait minutes on an insert loop.
 SWEEPS = [
     ("NSG24,EP32", "ef_search", (16, 32, 64, 128)),
     ("IVF128,Flat", "nprobe", (1, 4, 16, 64)),
     ("IVFPQ64x16", "nprobe", (4, 16)),
+    ("HNSW16,EP16", "ef_search", (16, 64)),
 ]
+HNSW_BUILD_CUTOFF = int(os.environ.get("BENCH_HNSW_MAX_N", 5000))
 
 
 def run():
     data, queries, ti = dataset()
-    rows = []
+    points, rows = [], []
     for spec, knob, values in SWEEPS:
+        if spec.startswith("HNSW") and data.shape[0] > HNSW_BUILD_CUTOFF:
+            print(f"skip {spec}: N={data.shape[0]} > "
+                  f"BENCH_HNSW_MAX_N={HNSW_BUILD_CUTOFF}")
+            continue
         idx = build_index(spec, data)
         assert knob in idx.search_params_space().names(), (spec, knob)
         for v in values:
             params = SearchParams(**{knob: v})
             d, i = idx.search(queries, K, params)
-            r = recall_at_k(i, ti)
+            r = float(recall_at_k(i, ti))
             qps = measure_qps(lambda q: idx.search(q, K, params)[0],
                               queries, repeats=3)
+            points.append({
+                "spec": spec, "knob": knob, "value": v,
+                "recall": round(r, 4), "qps": round(qps, 1),
+                "mem_mb": round(idx.memory_bytes() / 1e6, 2),
+            })
             rows.append([f"{spec} {knob}={v}", round(r, 4), f"{qps:.1f}",
                          f"mem {idx.memory_bytes()/1e6:.1f}MB"])
 
     headers = ["config", "recall@10", "QPS", ""]
     print_table("QPS-recall frontiers", headers, rows)
     save("qps_recall_curves", rows, headers)
-    return rows
+    path = save_bench_json("qps", {"points": points})
+    print(f"wrote {path}")
+    return points
 
 
 if __name__ == "__main__":

@@ -11,8 +11,8 @@ Public surface:
 from repro.core.beam_search import beam_search  # noqa: F401
 from repro.core.flat import FlatIndex, recall_at_k  # noqa: F401
 from repro.core.index_api import (  # noqa: F401
-    Index, PreprocessedIndex, SearchParams, build_index, list_index_specs,
-    register_index,
+    Index, PreprocessedIndex, SearchParams, available_factories, build_index,
+    list_index_specs, register_index,
 )
 from repro.core.pipeline import (  # noqa: F401
     IndexParams, TunedGraphIndex, build_vanilla_nsg,

@@ -20,6 +20,17 @@ Two loop modes:
   * ``while``: `lax.while_loop`, exits when the pool converges (CPU/latency).
   * ``fori``:  fixed `max_iters` trip count — deterministic FLOPs, used by
     the dry-run so `cost_analysis()` is meaningful, and maps to TPU best.
+
+Two batch layouts:
+  * ``vmap``: per-query program, lifted over the batch by `jax.vmap` (the
+    original formulation — one (R, D) gather per query per hop).
+  * ``batched``: batch-major — all Q queries step together, so each hop is
+    ONE (Q, R) id block fed to a single gather+distance call. That block is
+    exactly the shape `kernels/gather_dist` wants, so the Pallas
+    scalar-prefetch kernel is the default expansion path on TPU (the jnp
+    reference elsewhere). Converged queries are masked out per hop
+    (`lax.select` on the lane state), which reproduces `vmap(while_loop)`
+    semantics bit-for-bit: both layouts return identical ids and distances.
 """
 from __future__ import annotations
 
@@ -30,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.distances import match_vma
+from repro.kernels.gather_dist import gather_dist as _kernel_gather_dist
 
 
 def _sqdist_rows(query: jax.Array, rows: jax.Array) -> jax.Array:
@@ -71,22 +83,73 @@ def _expand(state, query, db, neighbors, gather_dist):
     return pool_i, pool_d, pool_v, n_hops + active.astype(jnp.int32)
 
 
+def _expand_batch(state, queries, db, neighbors, gather_dist_b):
+    """Batch-major `_expand`: one (Q, R) gather + distance block per hop."""
+    pool_i, pool_d, pool_v, n_hops = state        # (Q, ef) / (Q,)
+    q_idx = jnp.arange(pool_i.shape[0])
+    unvisited = (~pool_v) & (pool_i >= 0)
+    masked = jnp.where(unvisited, pool_d, jnp.inf)
+    slot = jnp.argmin(masked, axis=1)             # (Q,)
+    active = jnp.take_along_axis(unvisited, slot[:, None], 1)[:, 0]
+    pool_v = pool_v.at[q_idx, slot].set(True)
+    node = jnp.where(
+        active, jnp.take_along_axis(pool_i, slot[:, None], 1)[:, 0], 0)
+    nbr = neighbors[node]                         # (Q, R)
+    valid = (nbr >= 0) & active[:, None]
+    safe = jnp.where(valid, nbr, 0)
+    nd = gather_dist_b(queries, db, safe)         # (Q, R) — ONE call per hop
+    nd = jnp.where(valid, nd, jnp.inf)
+    pool_i, pool_d, pool_v = jax.vmap(_merge)(
+        pool_i, pool_d, pool_v, jnp.where(valid, safe, -1), nd)
+    return pool_i, pool_d, pool_v, n_hops + active.astype(jnp.int32)
+
+
+def resolve_gather_backend(backend: Optional[str] = None) -> Optional[str]:
+    """None -> the Pallas kernel on TPU, the fused-jnp reference elsewhere.
+
+    Returning ``None`` (off-TPU default) selects the vmapped
+    `_default_gather_dist`, whose lowering is identical to the vmap layout's
+    — that is what makes the two layouts agree exactly.
+    """
+    if backend is None and jax.default_backend() == "tpu":
+        return "pallas"
+    return backend
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("ef", "k", "max_iters", "mode", "gather_dist"))
+    static_argnames=("ef", "k", "max_iters", "mode", "gather_dist",
+                     "layout", "gather_backend"))
 def beam_search(queries: jax.Array, db: jax.Array, neighbors: jax.Array,
                 entry_ids: jax.Array, *, ef: int, k: int,
                 max_iters: int = 0, mode: str = "while",
-                gather_dist: Optional[Callable] = None):
+                gather_dist: Optional[Callable] = None,
+                layout: str = "vmap",
+                gather_backend: Optional[str] = None):
     """Batched graph search.
 
     queries: (Q, D); db: (N, D); neighbors: (N, R) int32 (-1 padded);
     entry_ids: (Q,) int32 per-query entry points (paper's tuned EPs).
     Returns (dists (Q, k) f32 ascending, ids (Q, k) i32, hops (Q,) i32).
+
+    ``layout="vmap"`` lifts a per-query program over the batch;
+    ``layout="batched"`` steps all queries together so each hop issues one
+    (Q, R) expansion — `gather_backend` then picks the expansion kernel
+    ("pallas" | "jnp" via kernels/gather_dist; None = pallas on TPU, the
+    layout-parity jnp path elsewhere). A custom ``gather_dist`` callable
+    takes (D,),(N,D),(R,) under "vmap" and (Q,D),(N,D),(Q,R) under
+    "batched".
     """
+    max_iters = max_iters or 4 * ef
+    if layout == "batched":
+        return _beam_search_batched(
+            queries, db, neighbors, entry_ids, ef=ef, k=k,
+            max_iters=max_iters, mode=mode, gather_dist=gather_dist,
+            gather_backend=gather_backend)
+    if layout != "vmap":
+        raise ValueError(f"bad layout {layout!r}")
     if gather_dist is None:
         gather_dist = _default_gather_dist
-    max_iters = max_iters or 4 * ef
 
     def one(query, entry):
         d0 = gather_dist(query, db, entry[None])[0]
@@ -116,6 +179,60 @@ def beam_search(queries: jax.Array, db: jax.Array, neighbors: jax.Array,
         return pool_d[:k], pool_i[:k], hops
 
     return jax.vmap(one)(queries, entry_ids)
+
+
+def _beam_search_batched(queries, db, neighbors, entry_ids, *, ef, k,
+                         max_iters, mode, gather_dist, gather_backend):
+    if gather_dist is not None:
+        gd = gather_dist
+    else:
+        backend = resolve_gather_backend(gather_backend)
+        if backend is None:
+            # vmap of the per-query fn lowers to the same batched dot_general
+            # as the "vmap" layout traces — exact cross-layout agreement.
+            gd = jax.vmap(_default_gather_dist, in_axes=(0, None, 0))
+        else:
+            gd = functools.partial(_kernel_gather_dist, backend=backend)
+    nq = queries.shape[0]
+
+    d0 = gd(queries, db, entry_ids[:, None])[:, 0]
+    pool_i = match_vma(jnp.full((nq, ef), -1, jnp.int32), queries, db,
+                       neighbors, entry_ids).at[:, 0].set(entry_ids)
+    pool_d = jnp.full((nq, ef), jnp.inf, jnp.float32).at[:, 0].set(d0)
+    pool_d = match_vma(pool_d, queries, db, neighbors, entry_ids)
+    pool_v = match_vma(jnp.zeros((nq, ef), bool), queries, db, neighbors,
+                       entry_ids)
+    hops = match_vma(jnp.zeros((nq,), jnp.int32), queries, db, neighbors,
+                     entry_ids)
+    state = (pool_i, pool_d, pool_v, hops)
+
+    body = lambda s: _expand_batch(s, queries, db, neighbors, gd)
+
+    def lane_cond(s):
+        i, d, v, h = s
+        return jnp.any((~v) & (i >= 0), axis=1) & (h < max_iters)
+
+    if mode == "while":
+        # mirror vmap(while_loop) batching: run while ANY lane wants to,
+        # freeze lanes whose own cond is false.
+        def cond(s):
+            return jnp.any(lane_cond(s))
+
+        def guarded(s):
+            new = body(s)
+            keep = lane_cond(s)
+
+            def sel(a, b):
+                pred = keep.reshape(keep.shape + (1,) * (a.ndim - 1))
+                return jnp.where(pred, a, b)
+            return jax.tree_util.tree_map(sel, new, s)
+        state = jax.lax.while_loop(cond, guarded, state)
+    elif mode == "fori":
+        state = jax.lax.fori_loop(0, max_iters, lambda _, s: body(s), state)
+    else:
+        raise ValueError(f"bad mode {mode!r}")
+    pool_i, pool_d, _, hops = state
+    return pool_d[:, :k], pool_i[:, :k], hops
 
 
 def _default_gather_dist(query: jax.Array, db: jax.Array,

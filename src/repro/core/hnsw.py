@@ -1,9 +1,17 @@
-"""HNSW — paper Fig. 1 baseline ("HNSW32,Flat").
+"""HNSW — paper Fig. 1 baseline ("HNSW32,Flat"), device-resident search.
 
 Hierarchical navigable small world graph (Malkov & Yashunin). The build is
-the classic sequential greedy-insert (host numpy, exactly like the original);
-layer-0 search reuses the TPU-native fixed-beam kernel from beam_search with
-the upper layers providing the entry point via greedy descent.
+the classic sequential greedy-insert (host numpy, exactly like the original).
+Search is batch-native end to end:
+
+  * the upper layers are stacked into one padded (L, N, m) device table at
+    fit time, and the greedy entry-point descent for a whole query batch is
+    a single jitted call (`vmap` over a per-layer `lax.while_loop`) — zero
+    per-query host loops;
+  * with ``ep_clusters > 1`` the paper's §3.1 entry-point knob replaces the
+    hierarchy: k-means representatives are fit at build time and selected
+    per query in one device call (spec ``HNSW32,EP16``);
+  * layer-0 search is the batch-major TPU beam kernel from beam_search.
 """
 from __future__ import annotations
 
@@ -14,25 +22,71 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.beam_search import beam_search
+from repro.core.beam_search import _sqdist_rows, beam_search
+from repro.core.entry_points import EntryPointSelector, fit_entry_points
+
+
+@jax.jit
+def _descend_upper(queries: jax.Array, db: jax.Array, upper: jax.Array,
+                   entry: jax.Array) -> jax.Array:
+    """Greedy descent through the stacked upper layers, whole batch at once.
+
+    queries: (Q, D); db: (N, D); upper: (L, N, m) int32 (-1 padded, row li
+    holding graph layer li+1); entry: () int32 top-level entry node.
+    Returns (Q,) int32 layer-0 entry ids.
+    """
+    n_layers = upper.shape[0]
+
+    def one(q):
+        d0 = _sqdist_rows(q, db[entry][None, :])[0]
+
+        def layer_step(i, carry):
+            table = upper[n_layers - 1 - i]          # descend top -> layer 1
+
+            def body(s):
+                cur, cur_d, _ = s
+                nbrs = table[cur]                    # (m,)
+                valid = nbrs >= 0
+                safe = jnp.where(valid, nbrs, 0)
+                d = jnp.where(valid, _sqdist_rows(q, db[safe]), jnp.inf)
+                j = jnp.argmin(d)
+                better = d[j] < cur_d
+                return (jnp.where(better, safe[j], cur).astype(jnp.int32),
+                        jnp.where(better, d[j], cur_d), better)
+
+            cur, cur_d, _ = jax.lax.while_loop(
+                lambda s: s[2], body, carry + (True,))
+            return cur, cur_d
+
+        cur, _ = jax.lax.fori_loop(0, n_layers, layer_step,
+                                   (entry.astype(jnp.int32), d0))
+        return cur
+
+    return jax.vmap(one)(queries)
 
 
 class HNSWIndex:
     def __init__(self, m: int = 32, ef_construction: int = 64,
-                 ef_search: int = 64, seed: int = 0):
+                 ef_search: int = 64, seed: int = 0, ep_clusters: int = 0):
         self.m = m
         self.m0 = 2 * m
         self.ef_c = ef_construction
         self.ef_s = ef_search
+        self.ep_clusters = ep_clusters
         self.rng = np.random.default_rng(seed)
         self.layers: List[np.ndarray] = []     # [L][n, deg] neighbor ids
         self.node_level: Optional[np.ndarray] = None
         self.entry: int = 0
         self.data: Optional[np.ndarray] = None
+        self.eps: Optional[EntryPointSelector] = None
+        # device-resident search state (built by _finalize_device)
+        self._db: Optional[jax.Array] = None
+        self._nbr0: Optional[jax.Array] = None
+        self._upper: Optional[jax.Array] = None
 
     # -- build (host, sequential greedy insert) ---------------------------
     def fit(self, data: jax.Array, *, key=None):
-        # key accepted for Index-protocol uniformity; build randomness comes
+        # key seeds the optional entry-point k-means; build randomness comes
         # from the constructor's seed-ed generator.
         x = np.asarray(data, np.float32)
         n = x.shape[0]
@@ -50,7 +104,22 @@ class HNSWIndex:
         for i in order:
             self._insert(int(i), x, levels[int(i)], inserted)
             inserted.append(int(i))
+        self._finalize_device(key)
         return self
+
+    def _finalize_device(self, key=None):
+        """Move everything the search path touches onto the device once."""
+        self._db = jnp.asarray(self.data)
+        self._nbr0 = jnp.asarray(self.layers[0])
+        if len(self.layers) > 1:
+            self._upper = jnp.stack(
+                [jnp.asarray(layer) for layer in self.layers[1:]])
+        else:
+            self._upper = jnp.full((0, self.data.shape[0], self.m), -1,
+                                   jnp.int32)
+        if self.ep_clusters > 1:
+            key = key if key is not None else jax.random.PRNGKey(0)
+            self.eps = fit_entry_points(key, self._db, self.ep_clusters)
 
     def _greedy(self, q: np.ndarray, start: int, layer: np.ndarray) -> int:
         cur = start
@@ -139,24 +208,34 @@ class HNSWIndex:
         return ef_search_space()
 
     def memory_bytes(self) -> int:
-        return int(self.data.size * 4
-                   + sum(layer.size for layer in self.layers) * 4)
+        total = int(self.data.size * 4
+                    + sum(layer.size for layer in self.layers) * 4)
+        if self.eps is not None:
+            total += int((self.eps.centroids.size
+                          + self.eps.member_ids.size) * 4)
+        return total
 
-    # -- search (device, batched layer-0 beam) -----------------------------
+    # -- search (device end to end) ----------------------------------------
+    def entry_points(self, queries: jax.Array) -> jax.Array:
+        """(Q, D) -> (Q,) int32 layer-0 entry ids, one device call."""
+        q = jnp.asarray(queries, jnp.float32)
+        if self.eps is not None:                 # paper §3.1 EP knob
+            return self.eps.select(q)
+        if self._upper.shape[0] == 0:            # single-layer graph
+            return jnp.full((q.shape[0],), self.entry, jnp.int32)
+        return _descend_upper(q, self._db, self._upper,
+                              jnp.int32(self.entry))
+
     def search(self, queries: jax.Array, k: int, params=None, *,
-               ef: Optional[int] = None):
-        if ef is None and params is not None:
-            ef = params.ef_search
+               ef: Optional[int] = None, mode: Optional[str] = None):
+        if params is not None:
+            ef = ef if ef is not None else params.ef_search
+            mode = mode if mode is not None else params.mode
         ef = ef or self.ef_s
-        qn = np.asarray(queries, np.float32)
-        entries = np.empty(qn.shape[0], np.int32)
-        for qi in range(qn.shape[0]):           # greedy upper-layer descent
-            cur = self.entry
-            for l in range(int(self.node_level[self.entry]), 0, -1):
-                if l < len(self.layers):
-                    cur = self._greedy(qn[qi], cur, self.layers[l])
-            entries[qi] = cur
-        d, i, _ = beam_search(queries, jnp.asarray(self.data),
-                              jnp.asarray(self.layers[0]),
-                              jnp.asarray(entries), ef=max(ef, k), k=k)
+        mode = mode or "while"
+        q = jnp.asarray(queries, jnp.float32)
+        entries = self.entry_points(q)
+        d, i, _ = beam_search(q, self._db, self._nbr0, entries,
+                              ef=max(ef, k), k=k, mode=mode,
+                              layout="batched")
         return d, i

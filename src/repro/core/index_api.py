@@ -154,22 +154,26 @@ class IndexFactory:
     pattern: "re.Pattern[str]"
     build: FactoryFn
     grammar: str
+    examples: Tuple[str, ...] = ()
 
 
 _REGISTRY: Dict[str, IndexFactory] = {}
 _PCA_TOKEN = re.compile(r"^PCA(\d+)$")
 
 
-def register_index(name: str, pattern: str, grammar: str = ""):
+def register_index(name: str, pattern: str, grammar: str = "",
+                   examples: Tuple[str, ...] = ()):
     """Decorator: register a factory for spec tokens matching ``pattern``.
 
     The decorated fn receives (regex match for the head token, the remaining
     tokens, the post-preprocessing dimensionality) and returns the unfitted
-    index plus how many extra tokens it consumed.
+    index plus how many extra tokens it consumed. ``examples`` are small
+    representative specs of this family — the recall-regression net and the
+    benches enumerate them via ``available_factories``.
     """
     def deco(fn: FactoryFn) -> FactoryFn:
         _REGISTRY[name] = IndexFactory(name, re.compile(pattern), fn,
-                                       grammar or pattern)
+                                       grammar or pattern, tuple(examples))
         return fn
     return deco
 
@@ -178,6 +182,17 @@ def list_index_specs() -> Dict[str, str]:
     """Registered component name -> grammar (for error messages / docs)."""
     _ensure_builtins()
     return {f.name: f.grammar for f in _REGISTRY.values()}
+
+
+def available_factories() -> Dict[str, Tuple[str, ...]]:
+    """Component name -> its registered example specs.
+
+    The single enumeration point for "every index family we ship": the
+    per-spec recall-floor regression tests parametrize over this, so a new
+    ``register_index`` with examples is automatically under test.
+    """
+    _ensure_builtins()
+    return {f.name: f.examples for f in _REGISTRY.values() if f.examples}
 
 
 def split_pca_prefix(spec: str) -> Tuple[Optional[int], str]:
@@ -303,16 +318,18 @@ def _ensure_builtins():
     from repro.core.pipeline import IndexParams, TunedGraphIndex
     from repro.core.pq import PQIndex
 
-    @register_index("Flat", r"^Flat$", "Flat")
+    @register_index("Flat", r"^Flat$", "Flat", examples=("Flat",))
     def _flat(m, rest, dim):
         return FlatIndex(), 0
 
-    @register_index("IVFPQ", r"^IVFPQ(\d+)x(\d+)$", "IVFPQ<nlists>x<m>")
+    @register_index("IVFPQ", r"^IVFPQ(\d+)x(\d+)$", "IVFPQ<nlists>x<m>",
+                    examples=("IVFPQ16x8",))
     def _ivfpq(m, rest, dim):
         return IVFPQIndex(n_lists=int(m.group(1)), m=int(m.group(2))), 0
 
     @register_index("IVF", r"^IVF(\d+)$",
-                    "IVF<nlists>[,Flat] | IVF<nlists>,PQ<m>")
+                    "IVF<nlists>[,Flat] | IVF<nlists>,PQ<m>",
+                    examples=("IVF16", "IVF16,Flat", "IVF16,PQ8"))
     def _ivf(m, rest, dim):
         n_lists = int(m.group(1))
         if rest:
@@ -323,16 +340,27 @@ def _ensure_builtins():
                 return IVFIndex(n_lists=n_lists), 1
         return IVFIndex(n_lists=n_lists), 0
 
-    @register_index("PQ", r"^PQ(\d+)$", "PQ<m>")
+    @register_index("PQ", r"^PQ(\d+)$", "PQ<m>", examples=("PQ8",))
     def _pq(m, rest, dim):
         return PQIndex(m=int(m.group(1))), 0
 
-    @register_index("HNSW", r"^HNSW(\d+)$", "HNSW<m>[,Flat]")
+    @register_index("HNSW", r"^HNSW(\d+)$", "HNSW<m>[,Flat][,EP<k>]",
+                    examples=("HNSW8", "HNSW8,EP8"))
     def _hnsw(m, rest, dim):
-        used = 1 if rest and rest[0] == "Flat" else 0
-        return HNSWIndex(m=int(m.group(1))), used
+        used, ep = 0, 0
+        toks = list(rest)
+        if toks and toks[0] == "Flat":
+            used += 1
+            toks = toks[1:]
+        if toks:
+            em = re.match(r"^EP(\d+)$", toks[0])
+            if em:
+                ep = int(em.group(1))
+                used += 1
+        return HNSWIndex(m=int(m.group(1)), ep_clusters=ep), used
 
-    @register_index("NSG", r"^NSG(\d+)?$", "NSG[<degree>][,AH<keep>][,EP<k>]")
+    @register_index("NSG", r"^NSG(\d+)?$", "NSG[<degree>][,AH<keep>][,EP<k>]",
+                    examples=("NSG12", "NSG12,EP8", "NSG12,AH0.9,EP8"))
     def _nsg(m, rest, dim):
         degree = int(m.group(1)) if m.group(1) else 32
         ep, keep, used = 1, 1.0, 0

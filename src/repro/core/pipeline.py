@@ -104,8 +104,11 @@ class TunedGraphIndex:
         mode = mode or "while"
         q = self.project(queries)
         entries = self.eps.select(q)
+        # batch-major layout: every hop is one (Q, R) gather_dist block
+        # (Pallas kernel on TPU) — exact-parity with the vmap layout.
         d, i, hops = beam_search(q, self.base, self.graph.neighbors, entries,
-                                 ef=max(ef, k), k=k, mode=mode)
+                                 ef=max(ef, k), k=k, mode=mode,
+                                 layout="batched")
         orig = jnp.where(i >= 0, self.kept_idx[jnp.maximum(i, 0)], -1)
         return d, orig
 

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _bag_kernel(ids_ref, w_ref, row_ref, out_ref, *, bag: int,
                 combiner: str):
@@ -68,7 +70,7 @@ def embedding_bag_pallas(table: jax.Array, ids: jax.Array,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(safe, weights, table)

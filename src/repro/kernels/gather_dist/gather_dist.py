@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _gather_dist_kernel(ids_ref, q_ref, row_ref, out_ref):
     r = pl.program_id(1)
@@ -53,7 +55,7 @@ def gather_dist_pallas(queries: jax.Array, db: jax.Array, ids: jax.Array,
         _gather_dist_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(safe, queries, db)

@@ -1,0 +1,163 @@
+"""Bucketed micro-batching for the ANN serve path.
+
+Serving traffic arrives as ragged request batches (1 query here, 17 there).
+Every distinct batch shape is a fresh XLA compilation, so a naive serve loop
+spends its first minutes tracing instead of answering. This module keeps the
+jit cache hot under mixed batch sizes:
+
+  * ``pow2_buckets`` — the allowed batch shapes (powers of two up to the
+    configured maximum);
+  * ``BucketedSearch`` — pads every request batch up to its bucket, runs the
+    underlying search step, slices the padding back off. After ``warmup``
+    (one compile per bucket at startup) no request ever triggers a trace;
+  * ``MicroBatchQueue`` — accumulates requests for up to ``window_s``
+    seconds (or until the largest bucket fills), then serves them as one
+    padded batch and scatters results back per ticket.
+
+Results are exactly those of the unbatched search: padding rows are sliced
+off before anything is returned, and the per-query traversal is independent
+of its batch neighbors (beam_search lanes never interact).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pow2_buckets(max_batch: int, min_bucket: int = 1) -> Tuple[int, ...]:
+    """Power-of-two bucket sizes covering [1, max_batch]."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    buckets = []
+    b = max(1, min_bucket)
+    while b < max_batch:
+        buckets.append(b)
+        b *= 2
+    buckets.append(b)            # first power of two >= max_batch
+    return tuple(buckets)
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket that fits ``n`` queries."""
+    for b in sorted(buckets):
+        if n <= b:
+            return b
+    raise ValueError(f"batch of {n} exceeds largest bucket {max(buckets)}")
+
+
+class BucketedSearch:
+    """Pad request batches to fixed bucket shapes around any search step.
+
+    ``search_fn(queries) -> (dists, ids)`` is the wrapped step (e.g. the
+    closure from ``serve_step.ann_search_step``). Padding queries are copies
+    of the batch's first row — always in-distribution, sliced off on return.
+    ``dispatched`` records the padded batch size of every underlying call,
+    so tests (and ops dashboards) can verify the shape set stays equal to
+    the warmed bucket set.
+    """
+
+    def __init__(self, search_fn: Callable, buckets: Sequence[int]):
+        if not buckets:
+            raise ValueError("need at least one bucket")
+        self.search_fn = search_fn
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.dispatched: List[int] = []
+
+    @property
+    def max_batch(self) -> int:
+        return self.buckets[-1]
+
+    def warmup(self, dim: int, dtype=jnp.float32) -> None:
+        """Compile every bucket shape up front (server start, not first hit)."""
+        for b in self.buckets:
+            out = self.search_fn(jnp.zeros((b, dim), dtype))
+            jax.block_until_ready(out)
+            self.dispatched.append(b)
+
+    def __call__(self, queries: jax.Array):
+        n = queries.shape[0]
+        if n > self.max_batch:          # oversized: serve in max-bucket runs
+            parts = [self(queries[s:s + self.max_batch])
+                     for s in range(0, n, self.max_batch)]
+            return (jnp.concatenate([d for d, _ in parts]),
+                    jnp.concatenate([i for _, i in parts]))
+        b = bucket_for(n, self.buckets)
+        if n < b:
+            pad = jnp.broadcast_to(queries[:1],
+                                   (b - n,) + queries.shape[1:])
+            padded = jnp.concatenate([queries, pad], axis=0)
+        else:
+            padded = queries
+        self.dispatched.append(b)
+        d, i = self.search_fn(padded)
+        return d[:n], i[:n]
+
+
+class MicroBatchQueue:
+    """Accumulate requests, serve them as one bucketed batch per flush.
+
+    Synchronous single-owner queue (the serve loop owns it; a real deployment
+    would put it behind an RPC thread): ``submit`` returns a ticket,
+    ``flush`` answers every pending ticket, ``take(ticket)`` pops the answer
+    (popping is what keeps ``results`` bounded on a long-running server).
+    ``maybe_flush`` flushes when the batching window has elapsed or the
+    largest bucket is full — the latency/throughput trade the window knob
+    controls.
+    """
+
+    def __init__(self, search: BucketedSearch, window_s: float = 0.002):
+        self.search = search
+        self.window_s = window_s
+        self._pending: List[Tuple[int, np.ndarray]] = []
+        self._pending_rows = 0
+        self._oldest: Optional[float] = None
+        self._next_ticket = 0
+        self.results: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+    def submit(self, queries) -> int:
+        """Enqueue a (n, D) request; returns a ticket for ``results``."""
+        q = np.atleast_2d(np.asarray(queries))
+        if self._pending_rows + q.shape[0] > self.search.max_batch:
+            self.flush()
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, q))
+        self._pending_rows += q.shape[0]
+        if self._oldest is None:
+            self._oldest = time.perf_counter()
+        return ticket
+
+    def take(self, ticket: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Pop a flushed ticket's (dists, ids) — once, keeping memory flat."""
+        return self.results.pop(ticket)
+
+    def maybe_flush(self) -> bool:
+        """Flush if the window elapsed or the largest bucket is full."""
+        if not self._pending:
+            return False
+        full = self._pending_rows >= self.search.max_batch
+        due = (time.perf_counter() - self._oldest) >= self.window_s
+        if full or due:
+            self.flush()
+            return True
+        return False
+
+    def flush(self) -> None:
+        if not self._pending:
+            return
+        batch = jnp.asarray(
+            np.concatenate([q for _, q in self._pending], axis=0))
+        d, i = self.search(batch)
+        d, i = np.asarray(d), np.asarray(i)
+        row = 0
+        for ticket, q in self._pending:
+            n = q.shape[0]
+            self.results[ticket] = (d[row:row + n], i[row:row + n])
+            row += n
+        self._pending = []
+        self._pending_rows = 0
+        self._oldest = None

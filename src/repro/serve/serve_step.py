@@ -11,15 +11,25 @@ import jax.numpy as jnp
 from repro.models import recsys, transformer
 
 
-def ann_search_step(index, k: int = 10, params=None) -> Callable:
+def ann_search_step(index, k: int = 10, params=None,
+                    buckets=None) -> Callable:
     """Serve cell for ANY ``core.index_api.Index`` conformer.
 
     The index is baked into the closure (weights-as-constants, like the LM
     cells bake cfg); ``params`` is a ``SearchParams`` frozen at step-build
     time so the jitted search underneath sees static knobs.
+
+    ``buckets`` (a sequence of batch sizes, e.g. ``pow2_buckets(64)``) wraps
+    the step in ``serve.batching.BucketedSearch``: ragged request batches
+    are padded to the nearest bucket so mixed traffic reuses a small, warm
+    set of compiled shapes. Call ``.warmup(index.dim)`` on the returned step
+    to compile every bucket before taking traffic.
     """
     def step(queries):
         return index.search(queries, k, params)
+    if buckets:
+        from repro.serve.batching import BucketedSearch
+        return BucketedSearch(step, buckets)
     return step
 
 

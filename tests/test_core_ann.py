@@ -141,6 +141,24 @@ def test_beam_search_on_full_graph_is_exact(ann_data):
     assert recall_at_k(i, ti) == 1.0
 
 
+@pytest.mark.parametrize("mode", ["while", "fori"])
+def test_beam_layouts_agree_exactly(small_nsg, ann_data, mode):
+    """Acceptance: the batch-major traversal (one (Q, R) expansion block per
+    hop) returns bit-identical ids/dists/hops to the vmapped per-query
+    program on the tier-1 dataset."""
+    idx = small_nsg
+    q = idx.project(ann_data["queries"])
+    e = idx.eps.select(q)
+    kw = dict(ef=48, k=10, max_iters=192, mode=mode)
+    dv, iv, hv = beam_search(q, idx.base, idx.graph.neighbors, e,
+                             layout="vmap", **kw)
+    db_, ib, hb = beam_search(q, idx.base, idx.graph.neighbors, e,
+                              layout="batched", **kw)
+    np.testing.assert_array_equal(np.asarray(iv), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(dv), np.asarray(db_))
+    np.testing.assert_array_equal(np.asarray(hv), np.asarray(hb))
+
+
 def test_beam_modes_agree(small_nsg, ann_data):
     idx = small_nsg
     q = idx.project(ann_data["queries"])

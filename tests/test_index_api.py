@@ -10,8 +10,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    FlatIndex, Index, SearchParams, build_index, list_index_specs,
-    recall_at_k,
+    FlatIndex, Index, SearchParams, available_factories, build_index,
+    list_index_specs, recall_at_k,
 )
 from repro.core.index_api import parse_spec
 from repro.core.tuning import SearchParamsObjective, Study, TPESampler
@@ -29,31 +29,46 @@ def small_db():
     return data, queries, true_i
 
 
-# (spec, recall floor vs FlatIndex, maxed-out SearchParams for the override
-# pass) — covers every registered family, with and without a PCA prefix.
+def recall_floor(spec: str) -> float:
+    """Per-family recall@10 floor vs the brute-force oracle on small_db.
+
+    The regression net: a traversal/build change that degrades any family
+    below its floor fails here, not in a benchmark nobody re-ran.
+    """
+    if spec.startswith("PCA"):              # paper's d' reduction is lossy
+        return 0.55 if spec == "PCA24,Flat" else 0.50
+    if spec == "Flat":
+        return 0.999
+    if "PQ" in spec:                        # quantization caps recall
+        return 0.30
+    if "AH" in spec:                        # subsampling drops true hits
+        return 0.80
+    if spec.startswith("IVF"):
+        return 0.85
+    return 0.90                             # graph families (HNSW, NSG)
+
+
+# Every registered family's example specs (the registry is the single
+# enumeration point — a new register_index with examples lands here
+# automatically), plus PCA-prefixed composition for each kind.
 MAXED = SearchParams(ef_search=128, nprobe=16)
-SPECS = [
-    ("Flat", 0.999, MAXED),
-    ("IVF16", 0.85, MAXED),
-    ("IVF16,Flat", 0.85, MAXED),
-    ("IVF16,PQ8", 0.30, MAXED),
-    ("IVFPQ16x8", 0.30, MAXED),
-    ("PQ8", 0.30, MAXED),
-    ("HNSW8", 0.90, MAXED),
-    ("NSG12", 0.90, MAXED),
-    ("NSG12,EP8", 0.90, MAXED),
-    ("NSG12,AH0.9,EP8", 0.80, MAXED),
-    ("PCA24,Flat", 0.55, MAXED),
-    ("PCA24,IVF16", 0.50, MAXED),
-    ("PCA24,HNSW8", 0.50, MAXED),
-    ("PCA24,NSG12,EP8", 0.50, MAXED),
-]
+SPECS = [s for examples in available_factories().values() for s in examples]
+SPECS += ["PCA24,Flat", "PCA24,IVF16", "PCA24,HNSW8", "PCA24,NSG12,EP8"]
 
 
-@pytest.mark.parametrize("spec,floor,maxed", SPECS,
-                         ids=[s for s, _, _ in SPECS])
-def test_spec_contract(spec, floor, maxed, small_db):
+def test_regression_net_covers_all_families():
+    fams = available_factories()
+    assert set(fams) >= {"Flat", "IVF", "IVFPQ", "PQ", "HNSW", "NSG"}
+    assert "HNSW8,EP8" in fams["HNSW"]          # paper §3.1 EP knob on HNSW
+    assert "NSG12,AH0.9,EP8" in fams["NSG"]     # full paper pipeline
+    for name, examples in fams.items():
+        assert examples, f"family {name} registered without example specs"
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=SPECS)
+def test_spec_contract(spec, small_db):
     data, queries, true_i = small_db
+    floor = recall_floor(spec)
     idx = build_index(spec, data, key=jax.random.PRNGKey(0))
     assert isinstance(idx, Index)
     assert idx.spec == spec
@@ -68,7 +83,7 @@ def test_spec_contract(spec, floor, maxed, small_db):
     assert recall_at_k(i, true_i) >= floor
 
     # overridden SearchParams go through the same call, no refit
-    d2, i2 = idx.search(queries, 10, maxed)
+    d2, i2 = idx.search(queries, 10, MAXED)
     assert recall_at_k(i2, true_i) >= floor
 
 
@@ -156,6 +171,68 @@ def test_custom_registration_round_trips(small_db):
     data, queries, true_i = small_db
     idx = build_index("DoubleFlat", data)
     assert recall_at_k(idx.search(queries, 10)[1], true_i) >= 0.999
+
+
+# --------------------------------------------------------- HNSW serve path
+
+
+@pytest.fixture(scope="module")
+def hnsw_idx(small_db):
+    data, _, _ = small_db
+    return build_index("HNSW8", data, key=jax.random.PRNGKey(0))
+
+
+def test_hnsw_descent_is_batched_device_call(hnsw_idx, small_db):
+    """Upper-layer descent runs as ONE vmapped jit call for the whole batch
+    and lands on the same layer-0 entries as the host greedy reference."""
+    _, queries, _ = small_db
+    entries = hnsw_idx.entry_points(queries)
+    assert isinstance(entries, jax.Array)
+    assert entries.shape == (queries.shape[0],)
+    qn = np.asarray(queries, np.float32)
+    host = np.empty(qn.shape[0], np.int32)
+    for qi in range(qn.shape[0]):           # the loop the device path killed
+        cur = hnsw_idx.entry
+        for l in range(int(hnsw_idx.node_level[hnsw_idx.entry]), 0, -1):
+            if l < len(hnsw_idx.layers):
+                cur = hnsw_idx._greedy(qn[qi], cur, hnsw_idx.layers[l])
+        host[qi] = cur
+    # identical up to distance ties (matmul vs direct squared-diff rounding)
+    assert (np.asarray(entries) == host).mean() >= 0.95
+
+
+def test_hnsw_upper_table_is_device_resident(hnsw_idx):
+    layers = hnsw_idx.layers
+    assert hnsw_idx._upper.shape == (len(layers) - 1,) + layers[1].shape
+    for li, layer in enumerate(layers[1:]):
+        assert (np.asarray(hnsw_idx._upper[li]) == layer).all()
+
+
+def test_hnsw_search_passes_mode_through(hnsw_idx, small_db, monkeypatch):
+    """SearchParams.mode must reach beam_search (regression: was dropped)."""
+    import repro.core.hnsw as hnsw_mod
+    _, queries, _ = small_db
+    seen = {}
+    orig = hnsw_mod.beam_search
+
+    def spy(*args, **kw):
+        seen.update(kw)
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(hnsw_mod, "beam_search", spy)
+    hnsw_idx.search(queries, 5, SearchParams(mode="fori", ef_search=32))
+    assert seen["mode"] == "fori"
+    assert seen["ef"] == 32
+    assert seen["layout"] == "batched"
+
+
+def test_hnsw_ep_spec_replaces_hierarchy(small_db):
+    data, queries, true_i = small_db
+    idx = build_index("HNSW8,EP8", data, key=jax.random.PRNGKey(0))
+    assert idx.eps is not None and idx.eps.n_clusters == 8
+    entries = np.asarray(idx.entry_points(queries))
+    assert set(entries) <= set(np.asarray(idx.eps.member_ids))
+    assert recall_at_k(idx.search(queries, 10)[1], true_i) >= 0.90
 
 
 def test_recall_at_k_divides_by_requested_k():

@@ -90,6 +90,43 @@ def test_int8_quantization_error_bound(seed, scale):
     assert (err.max(axis=1) <= blockmax / 127 + 1e-6).all()
 
 
+_EF_CACHE = {}
+
+
+def _ef_fixture():
+    """One tiny NSG + oracle shared across hypothesis examples (hypothesis
+    can't take pytest fixtures; the build is cached module-globally)."""
+    if not _EF_CACHE:
+        from repro.core import FlatIndex, build_vanilla_nsg
+        from repro.data import clustered_vectors, queries_like
+        data = clustered_vectors(jax.random.PRNGKey(20), 400, 16,
+                                 n_clusters=8)
+        queries = queries_like(jax.random.PRNGKey(21), data, 32)
+        _, true_i = FlatIndex(data).search(queries, 10)
+        _EF_CACHE["idx"] = build_vanilla_nsg(
+            data, degree=10, ef_search=32, build_knn_k=10,
+            build_candidates=24)
+        _EF_CACHE["queries"] = queries
+        _EF_CACHE["true_i"] = true_i
+    return _EF_CACHE["idx"], _EF_CACHE["queries"], _EF_CACHE["true_i"]
+
+
+@settings(**SETTINGS)
+@given(ef=st.integers(10, 48), mult=st.integers(2, 4))
+def test_recall_nondecreasing_in_ef_search(ef, mult):
+    """Widening the beam keeps every pool candidate it had before, so
+    recall@k must not drop as ef_search grows — the monotonicity the
+    paper's QPS/recall sweeps (and our tuner's feasibility search) assume."""
+    from repro.core import SearchParams
+    idx, queries, true_i = _ef_fixture()
+    r_lo = recall_at_k(
+        idx.search(queries, 10, SearchParams(ef_search=ef))[1], true_i)
+    r_hi = recall_at_k(
+        idx.search(queries, 10, SearchParams(ef_search=ef * mult))[1],
+        true_i)
+    assert r_hi >= r_lo
+
+
 def test_lm_causality():
     """Changing future tokens must not change past logits."""
     from repro.configs import get_arch

@@ -1,0 +1,121 @@
+"""Bucketed micro-batching serve path: padding correctness, result parity
+with unbatched search, and jit-cache stability under mixed batch sizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FlatIndex, SearchParams
+from repro.core.distances import l2_topk
+from repro.serve.batching import (
+    BucketedSearch, MicroBatchQueue, bucket_for, pow2_buckets,
+)
+from repro.serve.serve_step import ann_search_step
+
+
+def test_pow2_buckets_cover_range():
+    assert pow2_buckets(64) == (1, 2, 4, 8, 16, 32, 64)
+    assert pow2_buckets(48) == (1, 2, 4, 8, 16, 32, 64)
+    assert pow2_buckets(1) == (1,)
+    assert pow2_buckets(64, min_bucket=8) == (8, 16, 32, 64)
+    with pytest.raises(ValueError):
+        pow2_buckets(0)
+
+
+def test_bucket_for_smallest_fit():
+    buckets = (1, 2, 4, 8)
+    assert bucket_for(1, buckets) == 1
+    assert bucket_for(3, buckets) == 4
+    assert bucket_for(8, buckets) == 8
+    with pytest.raises(ValueError):
+        bucket_for(9, buckets)
+
+
+@pytest.mark.parametrize("n", [1, 3, 5, 17, 32])
+def test_bucketed_step_matches_unbatched(ann_data, n):
+    """Padding to a bucket and slicing back must be invisible in results."""
+    idx = FlatIndex(ann_data["data"])
+    step = ann_search_step(idx, k=10, params=SearchParams(chunk=512),
+                          buckets=pow2_buckets(32))
+    q = ann_data["queries"][:n]
+    d, i = step(q)
+    du, iu = idx.search(q, 10, SearchParams(chunk=512))
+    assert d.shape == (n, 10) and i.shape == (n, 10)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(iu))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(du))
+
+
+def test_repeated_bucket_does_not_retrace(ann_data):
+    """Ragged sizes sharing a bucket present ONE shape to jit — after the
+    first hit (or warmup) the cache is never re-entered."""
+    data = ann_data["data"]
+    traces = []
+
+    @jax.jit
+    def raw(q):
+        traces.append(q.shape[0])       # trace-time side effect only
+        return l2_topk(q, data, 10)
+
+    bs = BucketedSearch(raw, pow2_buckets(8))
+    q = ann_data["queries"]
+    for n in (5, 7, 8, 6, 8):           # all map to bucket 8
+        bs(q[:n])
+    assert traces == [8]
+    assert set(bs.dispatched) == {8}
+
+    bs.warmup(dim=data.shape[1])        # compiles remaining buckets 1,2,4
+    n_after_warm = len(traces)
+    for n in (1, 2, 3, 4, 5, 8):
+        bs(q[:n])
+    assert len(traces) == n_after_warm  # zero post-warmup traces
+    assert set(bs.dispatched) <= set(bs.buckets)
+
+
+def test_oversized_batch_served_in_max_bucket_runs(ann_data):
+    """A request larger than the largest bucket must not wedge the queue:
+    BucketedSearch splits it into max-bucket runs (regression test)."""
+    idx = FlatIndex(ann_data["data"])
+    step = ann_search_step(idx, k=10, buckets=pow2_buckets(8))
+    q = ann_data["queries"][:19]            # 19 > max bucket 8
+    d, i = step(q)
+    du, iu = idx.search(q, 10)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(iu))
+    assert set(step.dispatched) <= set(step.buckets)
+
+    queue = MicroBatchQueue(step, window_s=10.0)
+    ticket = queue.submit(q)
+    queue.flush()
+    np.testing.assert_array_equal(queue.take(ticket)[1], np.asarray(iu))
+    assert not queue.results                # take() popped it
+
+
+def test_queue_scatters_results_per_ticket(ann_data):
+    idx = FlatIndex(ann_data["data"])
+    step = ann_search_step(idx, k=10, buckets=pow2_buckets(32))
+    queue = MicroBatchQueue(step, window_s=10.0)
+    q = ann_data["queries"]
+    slices = [(0, 3), (3, 8), (8, 9), (9, 16)]
+    tickets = [queue.submit(q[a:b]) for a, b in slices]
+    assert not queue.results                # window not elapsed, no flush yet
+    assert queue.maybe_flush() is False
+    queue.flush()
+    for ticket, (a, b) in zip(tickets, slices):
+        du, iu = idx.search(q[a:b], 10)
+        np.testing.assert_array_equal(queue.results[ticket][1],
+                                      np.asarray(iu))
+
+
+def test_queue_flushes_on_window_and_capacity(ann_data):
+    idx = FlatIndex(ann_data["data"])
+    step = ann_search_step(idx, k=10, buckets=pow2_buckets(8))
+    queue = MicroBatchQueue(step, window_s=0.0)
+    t0 = queue.submit(ann_data["queries"][:2])
+    assert queue.maybe_flush() is True      # zero window -> due immediately
+    assert t0 in queue.results
+    # capacity: submissions beyond the largest bucket force an early flush
+    t1 = queue.submit(ann_data["queries"][:6])
+    t2 = queue.submit(ann_data["queries"][6:12])    # 6 + 6 > bucket 8
+    assert t1 in queue.results              # t1 flushed to make room
+    queue.flush()
+    assert t2 in queue.results
+    assert queue.results[t2][1].shape == (6, 10)
