@@ -1,0 +1,72 @@
+"""Build-backend scaling: seconds + distance-evaluation counts per backend
+per N -> ``BENCH_build.json`` at the repo root (CI uploads it next to
+BENCH_qps.json, the accumulating build-cost trajectory).
+
+The reproduced quantity is the *distance-evaluation* gap: exact kNN-graph
+construction issues N^2 evaluations while NN-Descent converges in orders of
+magnitude fewer at scale (wall-clock on the 1-core CI box still favors the
+exact matmul sweep at small N — which is exactly why ``knn_backend="auto"``
+switches on N, and why both numbers land in the artifact).
+
+Scale via ``BENCH_BUILD_NS`` (comma-separated Ns) and BENCH_DIM/BENCH_Q;
+the CI bench-smoke runs a tiny instance of exactly this file.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import DIM, print_table, save, save_bench_json
+from repro.core.build import build_knn, knn_graph_recall
+from repro.data import clustered_vectors
+
+NS = tuple(int(s) for s in os.environ.get(
+    "BENCH_BUILD_NS", "2000,5000,10000").split(",") if s.strip())
+K = int(os.environ.get("BENCH_BUILD_K", 10))
+
+
+def run():
+    points, rows = [], []
+    for n in NS:
+        data = clustered_vectors(jax.random.PRNGKey(42), n, DIM,
+                                 n_clusters=max(8, n // 400))
+        per_backend = {}
+        for backend in ("exact", "nndescent"):
+            t0 = time.perf_counter()
+            d, ids, stats = build_knn(data, K, backend=backend,
+                                      key=jax.random.PRNGKey(0),
+                                      with_stats=True)
+            jax.block_until_ready(ids)
+            secs = time.perf_counter() - t0
+            per_backend[backend] = np.asarray(ids)
+            rec = (1.0 if backend == "exact" else
+                   knn_graph_recall(per_backend["nndescent"],
+                                    per_backend["exact"]))
+            points.append({
+                "n": n, "dim": DIM, "k": K, "backend": backend,
+                "seconds": round(secs, 3),
+                "distance_evals": stats.distance_evals,
+                "rounds": stats.rounds,
+                "knn_recall_vs_exact": round(float(rec), 4),
+            })
+            rows.append([f"N={n} {backend}", f"{secs:.2f}s",
+                         f"{stats.distance_evals:.3g} evals",
+                         f"recall {rec:.4f}"])
+        ratio = (points[-2]["distance_evals"] /
+                 max(points[-1]["distance_evals"], 1))
+        rows.append([f"N={n} eval ratio", f"{ratio:.1f}x", "", ""])
+
+    headers = ["config", "build time", "distance evals", "vs exact"]
+    print_table("kNN-graph build scaling", headers, rows)
+    save("build_scaling", rows, headers)
+    path = save_bench_json("build", {"points": points},
+                           dataset={"ns": list(NS), "dim": DIM, "k": K})
+    print(f"wrote {path}")
+    return points
+
+
+if __name__ == "__main__":
+    run()

@@ -57,19 +57,22 @@ def save(name: str, rows, headers=None):
     return path
 
 
-def save_bench_json(name: str, payload: Dict) -> str:
+def save_bench_json(name: str, payload: Dict,
+                    dataset: Optional[Dict] = None) -> str:
     """Write ``BENCH_<name>.json`` at the repo root — the perf trajectory.
 
     Unlike ``save`` (per-run tables under benchmarks/results/), these land
     at a fixed path so successive commits accumulate a comparable history
     (CI uploads them as artifacts). ``payload`` should carry the dataset
     scale alongside the numbers: absolute QPS on one machine is only
-    comparable to itself.
+    comparable to itself. ``dataset`` overrides the default BENCH_N-shaped
+    header for benches scaled by their own env vars.
     """
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     meta = {
         "backend": jax.default_backend(),
-        "dataset": {"n": N_DB, "dim": DIM, "n_queries": N_QUERIES, "k": K},
+        "dataset": dataset if dataset is not None else
+        {"n": N_DB, "dim": DIM, "n_queries": N_QUERIES, "k": K},
     }
     with open(path, "w") as f:
         json.dump({**meta, **payload}, f, indent=1, default=str)

@@ -31,7 +31,7 @@ def run(n_trials: int = 18):
 
     obj = AnnObjective(data, queries, k=K, base_params=base,
                        recall_floor=0.9, qps_repeats=3)
-    space = default_space(dim, data.shape[0])
+    space = default_space(dim, data.shape[0], max_degree=24)
     study = Study(space, TPESampler(seed=0, n_startup=6), n_objectives=2)
     t0 = time.time()
     study.optimize(obj.multi_objective, n_trials=n_trials)

@@ -27,7 +27,7 @@ def run(n_trials: int = 14):
     for mode in ("single+constraint", "multi-objective"):
         obj = AnnObjective(data, queries, k=K, base_params=base,
                           recall_floor=0.9, qps_repeats=3)
-        space = default_space(dim, data.shape[0])
+        space = default_space(dim, data.shape[0], max_degree=24)
         t0 = time.time()
         if mode.startswith("single"):
             study = Study(space, TPESampler(seed=1, n_startup=6))

@@ -39,7 +39,8 @@ def main():
                        base_params=IndexParams(
                            pca_dim=64, graph_degree=16, build_knn_k=16,
                            build_candidates=32, ef_search=64))
-    study = Study(default_space(64, 8000), TPESampler(seed=0, n_startup=4),
+    study = Study(default_space(64, 8000, max_degree=16),
+                  TPESampler(seed=0, n_startup=4),
                   n_objectives=2)
     study.optimize(obj.multi_objective, n_trials=8)
     front = study.pareto_front()

@@ -159,6 +159,8 @@ class ANNConfig:
     graph_degree: int = 32           # R (NSG out-degree budget)
     build_knn_k: int = 32
     build_candidates: int = 64       # MRNG candidate pool L
+    prune_alpha: float = 1.0         # α-RNG occlusion slack (1.0 = MRNG)
+    knn_backend: str = "auto"        # exact | nndescent | auto (core.build)
     dtype: str = "float32"
 
 

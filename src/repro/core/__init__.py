@@ -6,9 +6,13 @@ Public surface:
     build_vanilla_nsg                   — untuned baseline
     FlatIndex / recall_at_k             — oracle + metric
     beam_search                         — TPU-native graph traversal
+    build_knn / alpha_prune / reprune   — graph-build substrate (core.build)
     tuning.Study                        — black-box parameter tuning
 """
 from repro.core.beam_search import beam_search  # noqa: F401
+from repro.core.build import (  # noqa: F401
+    BuildStats, alpha_prune, build_knn, nn_descent, reprune, reprune_nsg,
+)
 from repro.core.flat import FlatIndex, recall_at_k  # noqa: F401
 from repro.core.index_api import (  # noqa: F401
     Index, PreprocessedIndex, SearchParams, available_factories, build_index,

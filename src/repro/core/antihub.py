@@ -4,28 +4,52 @@ Hubness: the k-occurrence N_k(x) = how many other points list x among their
 k nearest neighbors. Anti-hubs (N_k ~ 0) are almost never the answer to a
 query, so dropping the lowest-N_k (1-alpha) fraction shrinks the database
 (and thus the L2 hotspot + memory) with minimal recall loss.
+
+Both entry points accept a precomputed kNN id table (``knn_ids``) so
+callers that already built one — ``TunedGraphIndex.fit``, the tuner's
+per-trial evaluations — never pay a second O(N^2) pass; absent that, the
+graph is built through ``core.build.build_knn`` with a selectable backend.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.knn_graph import knn_graph
+from repro.core.build import build_knn
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def k_occurrence(data: jax.Array, k: int = 10) -> jax.Array:
-    """(N,) int32 hub scores N_k(x) from the exact kNN graph."""
-    _, ids = knn_graph(data, k)
+@functools.partial(jax.jit, static_argnames=("n",))
+def _occurrence_from_ids(ids: jax.Array, n: int) -> jax.Array:
     flat = jnp.where(ids >= 0, ids, 0).reshape(-1)
     w = (ids >= 0).reshape(-1).astype(jnp.int32)
-    return jax.ops.segment_sum(w, flat, num_segments=data.shape[0])
+    return jax.ops.segment_sum(w, flat, num_segments=n)
 
 
-def antihub_keep_indices(data: jax.Array, keep_ratio: float,
-                         k: int = 10) -> jax.Array:
+def k_occurrence(data: jax.Array, k: int = 10, *,
+                 knn_ids: Optional[jax.Array] = None,
+                 backend: str = "exact",
+                 key: Optional[jax.Array] = None) -> jax.Array:
+    """(N,) int32 hub scores N_k(x) from the kNN graph.
+
+    ``knn_ids`` (N, >=k) skips the graph build entirely (its first k
+    columns are counted); otherwise the graph comes from ``build_knn``
+    with the given backend.
+    """
+    if knn_ids is None:
+        _, knn_ids = build_knn(data, k, backend=backend, key=key)
+    if knn_ids.shape[1] < k:
+        raise ValueError(
+            f"knn_ids has {knn_ids.shape[1]} columns, need k={k}")
+    return _occurrence_from_ids(knn_ids[:, :k], data.shape[0])
+
+
+def antihub_keep_indices(data: jax.Array, keep_ratio: float, k: int = 10, *,
+                         knn_ids: Optional[jax.Array] = None,
+                         backend: str = "exact",
+                         key: Optional[jax.Array] = None) -> jax.Array:
     """Sorted indices of the ceil(alpha*N) hubbiest points to KEEP."""
     if not 0.0 < keep_ratio <= 1.0:
         raise ValueError(f"keep_ratio must be in (0, 1], got {keep_ratio}")
@@ -34,7 +58,7 @@ def antihub_keep_indices(data: jax.Array, keep_ratio: float,
     n_keep = max(1, math.ceil(keep_ratio * n))
     if n_keep >= n:
         return jnp.arange(n, dtype=jnp.int32)
-    occ = k_occurrence(data, k)
+    occ = k_occurrence(data, k, knn_ids=knn_ids, backend=backend, key=key)
     # stable ordering: high occurrence first, ties by index
     order = jnp.argsort(-occ, stable=True)
     return jnp.sort(order[:n_keep]).astype(jnp.int32)

@@ -6,6 +6,14 @@ Queries shard across (`pod`, `data`) and replicate across `model`; each device
 beam-searches its local sub-graph, and the per-shard top-k lists (size
 shards x k — tiny) merge through one all-gather. No cross-shard pointer
 chasing ever happens on the hot path.
+
+Per-shard builds run through the ``core.build`` substrate: the shard's
+``IndexParams.knn_backend`` selects exact vs NN-Descent kNN-graph
+construction (``"auto"`` flips to NN-Descent once a shard crosses
+``build.AUTO_NND_MIN_N`` rows), so sharded build cost scales with device
+FLOPs rather than N^2 per shard. ``ShardedFactoryIndex`` inherits the same
+selection from its spec string (``,ND<K>``) or its own ``knn_backend=``
+constructor override (forwarded to every per-shard ``build_index`` call).
 """
 from __future__ import annotations
 
@@ -265,9 +273,11 @@ class ShardedFactoryIndex:
     generality (IVF/PQ/HNSW/Flat shards all work).
     """
 
-    def __init__(self, spec: str, n_shards: int = 2):
+    def __init__(self, spec: str, n_shards: int = 2,
+                 knn_backend: Optional[str] = None):
         self.spec = spec
         self.n_shards = n_shards
+        self.knn_backend = knn_backend   # per-shard build override
         self.subs: list = []
         self.offsets: Optional[np.ndarray] = None
         self.pca = None
@@ -287,7 +297,8 @@ class ShardedFactoryIndex:
         self.offsets = bounds[:-1]
         self.subs = [
             build_index(inner_spec, data[bounds[i]:bounds[i + 1]],
-                        key=jax.random.fold_in(key, i))
+                        key=jax.random.fold_in(key, i),
+                        knn_backend=self.knn_backend)
             for i in range(self.n_shards)
         ]
         return self

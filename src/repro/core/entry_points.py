@@ -8,6 +8,7 @@ touching the graph itself.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import jax
@@ -34,7 +35,18 @@ class EntryPointSelector:
 
 def fit_entry_points(key: jax.Array, data: jax.Array, k: int,
                      iters: int = 10) -> EntryPointSelector:
-    """k=1 degenerates to the global medoid (vanilla NSG's navigating node)."""
+    """k=1 degenerates to the global medoid (vanilla NSG's navigating node).
+
+    k > N (a tuner can propose more clusters than a subsampled database
+    has points) is clamped to N with a warning — k-means with more
+    clusters than points is underspecified.
+    """
+    n = data.shape[0]
+    if k > n:
+        warnings.warn(
+            f"ep_clusters={k} exceeds database size N={n}; clamping to {n}",
+            RuntimeWarning, stacklevel=2)
+        k = n
     if k == 1:
         mean = jnp.mean(data.astype(jnp.float32), axis=0, keepdims=True)
         _, mid = nearest(mean, data)

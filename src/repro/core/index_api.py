@@ -235,13 +235,23 @@ def parse_spec(spec: str, dim: int) -> Tuple[Optional[int], Any]:
 
 
 def build_index(spec: str, data: jax.Array, *,
-                key: Optional[jax.Array] = None) -> Index:
+                key: Optional[jax.Array] = None,
+                knn_backend: Optional[str] = None) -> Index:
     """Build + fit an index from a factory string (the one-call entry point).
+
+    ``knn_backend`` overrides the build-time kNN-graph backend ("exact" |
+    "nndescent" | "auto") for families that build one (NSG); the spec's own
+    ``,ND<K>`` suffix is the in-grammar equivalent.
 
     >>> idx = build_index("PCA16,IVF64", data)
     >>> dists, ids = idx.search(queries, 10, SearchParams(nprobe=4))
     """
     pca_dim, index = parse_spec(spec, data.shape[1])
+    if knn_backend is not None:
+        from dataclasses import replace as _replace
+        params = getattr(index, "params", None)
+        if params is not None and hasattr(params, "knn_backend"):
+            index.params = _replace(params, knn_backend=knn_backend)
     if pca_dim is not None:
         index = PreprocessedIndex(pca_dim, index)
     index = index.fit(data, key=key)
@@ -359,25 +369,36 @@ def _ensure_builtins():
                 used += 1
         return HNSWIndex(m=int(m.group(1)), ep_clusters=ep), used
 
-    @register_index("NSG", r"^NSG(\d+)?$", "NSG[<degree>][,AH<keep>][,EP<k>]",
-                    examples=("NSG12", "NSG12,EP8", "NSG12,AH0.9,EP8"))
+    @register_index(
+        "NSG", r"^NSG(\d+)?(?:a(\d+(?:\.\d+)?))?$",
+        "NSG[<degree>][a<alpha>][,AH<keep>][,EP<k>][,ND<K>]",
+        examples=("NSG12", "NSG12,EP8", "NSG12,AH0.9,EP8",
+                  "NSG12a1.2,ND16"))
     def _nsg(m, rest, dim):
         degree = int(m.group(1)) if m.group(1) else 32
+        alpha = float(m.group(2)) if m.group(2) else 1.0
         ep, keep, used = 1, 1.0, 0
+        backend, knn_k = "auto", None
         for tok in rest:
             em = re.match(r"^EP(\d+)$", tok)
             ah = re.match(r"^AH(0\.\d+|1(?:\.0+)?)$", tok)
+            nd = re.match(r"^ND(\d+)?$", tok)
             if em:
                 ep = int(em.group(1))
             elif ah:
                 keep = float(ah.group(1))
+            elif nd:
+                backend = "nndescent"
+                if nd.group(1):
+                    knn_k = int(nd.group(1))
             else:
                 break
             used += 1
         params = IndexParams(
             pca_dim=dim, antihub_keep=keep, ep_clusters=ep,
-            graph_degree=degree, build_knn_k=degree,
-            build_candidates=max(2 * degree, 48))
+            graph_degree=degree, alpha=alpha,
+            build_knn_k=knn_k if knn_k is not None else degree,
+            build_candidates=max(2 * degree, 48), knn_backend=backend)
         return TunedGraphIndex(params), used
 
     # only flag success: a failure above must surface again on retry, not

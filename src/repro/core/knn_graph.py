@@ -3,6 +3,10 @@
 O(N^2 D) through the chunked streaming top-k; on the production mesh the row
 blocks shard across (pod, data) so build cost scales with chip count
 (see core/distributed.py: build_knn_sharded).
+
+Callers should go through ``core.build.build_knn`` (backend dispatch):
+this module is its ``backend="exact"`` path, ``build/nn_descent.py`` the
+sub-quadratic approximate one.
 """
 from __future__ import annotations
 

@@ -14,10 +14,15 @@ Build phases:
 
 Phases 1-4 dominate (>99% of distance work) and run on device; phase 5 is
 graph surgery, O(N * R) pointer work, inherently host-side.
+
+The pruning primitive itself lives in ``core/build/prune.py`` as the α-RNG
+rule (``alpha_prune``); ``mrng_prune`` below is its alpha=1 specialization,
+kept as the historical name. ``build_nsg(alpha=...)`` passes the knob
+through, and ``build.prune.reprune`` derives sparser (alpha, degree)
+variants from a built graph with no rebuild.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Tuple
 
 import jax
@@ -25,6 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.beam_search import beam_search
+from repro.core.build.prune import (
+    alpha_prune, mark_dups as _mark_dups, pairwise_rows_sqdist,
+    prune_in_chunks,
+)
 from repro.core.distances import nearest, pairwise_sqdist
 
 
@@ -33,49 +42,10 @@ class NSGGraph(NamedTuple):
     medoid: jax.Array      # () int32
 
 
-# ---------------------------------------------------------------------------
-# MRNG pruning (vmapped)
-# ---------------------------------------------------------------------------
-
-
-@functools.partial(jax.jit, static_argnames=("degree",))
 def mrng_prune(data: jax.Array, node_ids: jax.Array, cand_ids: jax.Array,
                cand_dists: jax.Array, degree: int) -> jax.Array:
-    """MRNG edge selection for a block of nodes.
-
-    node_ids: (B,); cand_ids/cand_dists: (B, L) distance-ascending candidate
-    pools (-1 padded). Returns (B, degree) pruned neighbor ids.
-
-    Rule: scanning candidates nearest-first, keep q unless some already-kept r
-    has d(r, q) < d(p, q)  (the "occlusion" test that makes the graph
-    monotonic).
-    """
-    L = cand_ids.shape[1]
-
-    def prune_one(p, c_ids, c_d):
-        keep = jnp.full((degree,), -1, jnp.int32)
-        kept_vecs = jnp.zeros((degree, data.shape[1]), jnp.float32)
-
-        def body(j, state):
-            keep, kept_vecs, cnt = state
-            q = c_ids[j]
-            dq = c_d[j]
-            qv = data[jnp.maximum(q, 0)].astype(jnp.float32)
-            dr = jnp.sum((kept_vecs - qv) ** 2, axis=-1)       # (degree,)
-            occupied = jnp.arange(degree) < cnt
-            occluded = jnp.any(occupied & (dr < dq))
-            dup = jnp.any(occupied & (keep == q))
-            ok = ((q >= 0) & (q != p) & (cnt < degree)
-                  & (~occluded) & (~dup))
-            slot = jnp.minimum(cnt, degree - 1)
-            keep = jnp.where(ok, keep.at[slot].set(q), keep)
-            kept_vecs = jnp.where(ok, kept_vecs.at[slot].set(qv), kept_vecs)
-            return keep, kept_vecs, cnt + ok.astype(jnp.int32)
-
-        keep, _, _ = jax.lax.fori_loop(0, L, body, (keep, kept_vecs, 0))
-        return keep
-
-    return jax.vmap(prune_one)(node_ids, cand_ids, cand_dists)
+    """MRNG edge selection — ``alpha_prune`` at alpha=1 (bit-identical)."""
+    return alpha_prune(data, node_ids, cand_ids, cand_dists, degree)
 
 
 # ---------------------------------------------------------------------------
@@ -113,30 +83,14 @@ def _candidate_pools(data, knn_ids, medoid, n_candidates, chunk):
     return jnp.concatenate(pools_i), jnp.concatenate(pools_d)
 
 
-@jax.jit
-def pairwise_rows_sqdist(q, data, ids):
-    """(B, D) queries vs per-row gathered ids (B, K) -> (B, K) sq dists."""
-    rows = data[jnp.maximum(ids, 0)].astype(jnp.float32)       # (B, K, D)
-    q32 = q.astype(jnp.float32)[:, None, :]
-    d = jnp.sum((rows - q32) ** 2, axis=-1)
-    return jnp.where(ids >= 0, d, jnp.inf)
-
-
-@jax.jit
-def _mark_dups(ids):
-    """True at positions holding a value already seen to the left."""
-    eq = ids[:, :, None] == ids[:, None, :]                    # (B, L, L)
-    tri = jnp.tril(jnp.ones(eq.shape[-2:], bool), k=-1)
-    return jnp.any(eq & tri[None], axis=-1) | (ids < 0)
-
-
 # ---------------------------------------------------------------------------
 # Build
 # ---------------------------------------------------------------------------
 
 
 def build_nsg(data: jax.Array, knn_ids: jax.Array, *, degree: int,
-              n_candidates: int = 64, chunk: int = 2048) -> NSGGraph:
+              n_candidates: int = 64, chunk: int = 2048,
+              alpha: float = 1.0) -> NSGGraph:
     n = data.shape[0]
     mean = jnp.mean(data.astype(jnp.float32), axis=0, keepdims=True)
     _, medoid = nearest(mean, data)
@@ -145,7 +99,8 @@ def build_nsg(data: jax.Array, knn_ids: jax.Array, *, degree: int,
     cand_i, cand_d = _candidate_pools(data, knn_ids, medoid,
                                       n_candidates, chunk)
     node_ids = jnp.arange(n, dtype=jnp.int32)
-    nbrs = _pruned_in_chunks(data, node_ids, cand_i, cand_d, degree, chunk)
+    nbrs = prune_in_chunks(data, node_ids, cand_i, cand_d, degree, chunk,
+                           alpha)
 
     # --- reverse-edge interconnect (host: ragged append) ---
     nbrs_np = np.asarray(nbrs)
@@ -171,20 +126,12 @@ def build_nsg(data: jax.Array, knn_ids: jax.Array, *, degree: int,
     order = jnp.argsort(union_d, axis=1)
     union_j = jnp.take_along_axis(union_j, order, axis=1)
     union_d = jnp.take_along_axis(union_d, order, axis=1)
-    nbrs = _pruned_in_chunks(data, node_ids, union_j, union_d, degree, chunk)
+    nbrs = prune_in_chunks(data, node_ids, union_j, union_d, degree, chunk,
+                           alpha)
 
     nbrs = _ensure_connected(np.array(nbrs), np.asarray(data),
                              int(medoid), np.asarray(knn_ids))
     return NSGGraph(neighbors=jnp.asarray(nbrs), medoid=medoid)
-
-
-def _pruned_in_chunks(data, node_ids, cand_i, cand_d, degree, chunk):
-    outs = []
-    for s in range(0, node_ids.shape[0], chunk):
-        e = min(s + chunk, node_ids.shape[0])
-        outs.append(mrng_prune(data, node_ids[s:e], cand_i[s:e],
-                               cand_d[s:e], degree))
-    return jnp.concatenate(outs)
 
 
 def _dists_in_chunks(data, node_ids, ids, chunk):
@@ -200,6 +147,8 @@ def _ensure_connected(nbrs: np.ndarray, data: np.ndarray, medoid: int,
     """BFS from medoid; attach unreachable nodes beneath their nearest
     reachable kNN parent (or the medoid), NSG's spanning-tree repair."""
     n, degree = nbrs.shape
+    protected = {}       # parent -> repair-edge slots: never evicted, so
+    # repairs are monotone and full rows can't ping-pong across rounds
     for _ in range(64):  # fixpoint: attaching can unlock whole islands
         seen = np.zeros(n, bool)
         frontier = [medoid]
@@ -215,24 +164,47 @@ def _ensure_connected(nbrs: np.ndarray, data: np.ndarray, medoid: int,
         missing = np.nonzero(~seen)[0]
         if missing.size == 0:
             break
-        seen_ids = np.nonzero(seen)[0]
         for u in missing:
-            parents = [int(p) for p in knn_ids[u] if p >= 0 and seen[p]]
-            if parents:
-                parent = parents[0]
-            else:
-                # nearest reachable node by true distance: a navigable bridge
+            def try_attach(parent):
+                row = nbrs[parent]
+                free = np.nonzero(row < 0)[0]
+                if free.size:
+                    slot = int(free[0])
+                else:
+                    # evict the farthest *evictable* edge; protected repair
+                    # edges stay, else repairs undo each other forever
+                    dr = ((data[row] - data[parent]) ** 2).sum(-1)
+                    for ss in protected.get(parent, ()):
+                        dr[ss] = -1.0
+                    slot = int(np.argmax(dr))
+                    if dr[slot] < 0:
+                        return False        # row is all repair edges
+                nbrs[parent, slot] = u
+                protected.setdefault(parent, set()).add(slot)
+                seen[u] = True  # u reachable; its subtree fixed next round
+                return True
+
+            # cheap path first: u's reachable kNNs as parents
+            placed = any(try_attach(int(p)) for p in knn_ids[u]
+                         if p >= 0 and seen[p])
+            if not placed:
+                # fallback (only when no kNN parent placed u): nearest
+                # reachable nodes by true distance — over the LIVE seen
+                # set, so nodes attached earlier this round can chain (a
+                # far-out cluster attaches internally instead of every
+                # member thrashing one distant parent's full row)
+                seen_ids = np.nonzero(seen)[0]
                 du = ((data[seen_ids] - data[u]) ** 2).sum(-1)
-                parent = int(seen_ids[np.argmin(du)])
-            row = nbrs[parent]
-            free = np.nonzero(row < 0)[0]
-            if free.size:
-                slot = free[0]
-            else:
-                # evict parent's farthest edge; the fixpoint loop re-checks
-                # anything this might orphan
-                dr = ((data[row] - data[parent]) ** 2).sum(-1)
-                slot = int(np.argmax(dr))
-            nbrs[parent, slot] = u
-            seen[u] = True  # u now reachable; its subtree fixed next round
+                near = [int(p) for p in seen_ids[np.argsort(du)[:16]]]
+                placed = any(try_attach(p) for p in near)
+                if not placed:
+                    # every candidate row saturated with protected repairs
+                    # (pathological): force-evict from the nearest parent
+                    # so connectivity is guaranteed, not best-effort
+                    parent = near[0]
+                    dr = ((data[nbrs[parent]] - data[parent]) ** 2).sum(-1)
+                    slot = int(np.argmax(dr))
+                    nbrs[parent, slot] = u
+                    protected.setdefault(parent, set()).add(slot)
+                    seen[u] = True
     return nbrs

@@ -6,6 +6,7 @@ D (pca_dim), alpha (antihub_keep), k (ep_clusters) + ef_search.
 """
 from __future__ import annotations
 
+import copy
 import time
 from dataclasses import dataclass, replace
 from typing import Optional
@@ -16,8 +17,8 @@ import jax.numpy as jnp
 from repro.configs.base import ANNConfig
 from repro.core import antihub as antihub_mod
 from repro.core.beam_search import beam_search
+from repro.core.build import build_knn, reprune_nsg
 from repro.core.entry_points import EntryPointSelector, fit_entry_points
-from repro.core.knn_graph import knn_graph
 from repro.core.nsg import NSGGraph, build_nsg
 from repro.core.pca import PCA, fit_pca
 
@@ -31,6 +32,13 @@ class IndexParams:
     graph_degree: int = 32
     build_knn_k: int = 32
     build_candidates: int = 64
+    # α-RNG pruning slack (Zhang et al. "Prune, Don't Rebuild") applied to
+    # squared distances; 1.0 is NSG's MRNG rule. NOT the paper's AntiHub
+    # alpha (that is antihub_keep above). Larger values prune harder.
+    alpha: float = 1.0
+    # kNN-graph build backend: "exact" | "nndescent" | "auto" (see
+    # core/build). Auto switches to NN-Descent at large N.
+    knn_backend: str = "auto"
 
     @staticmethod
     def from_config(cfg: ANNConfig) -> "IndexParams":
@@ -38,7 +46,9 @@ class IndexParams:
             pca_dim=cfg.pca_dim, antihub_keep=cfg.antihub_keep,
             ep_clusters=cfg.ep_clusters, ef_search=cfg.ef_search,
             graph_degree=cfg.graph_degree, build_knn_k=cfg.build_knn_k,
-            build_candidates=cfg.build_candidates)
+            build_candidates=cfg.build_candidates,
+            alpha=getattr(cfg, "prune_alpha", 1.0),
+            knn_backend=getattr(cfg, "knn_backend", "auto"))
 
 
 class TunedGraphIndex:
@@ -53,9 +63,18 @@ class TunedGraphIndex:
         self.eps: Optional[EntryPointSelector] = None
         self.build_seconds: float = 0.0
         self.input_dim: int = 0
+        self.knn_ids: Optional[jax.Array] = None     # build-time kNN table
 
     # -- build ------------------------------------------------------------
-    def fit(self, data: jax.Array, key: Optional[jax.Array] = None):
+    def fit(self, data: jax.Array, key: Optional[jax.Array] = None, *,
+            antihub_knn_ids: Optional[jax.Array] = None):
+        """Build the full pipeline.
+
+        ``antihub_knn_ids``: precomputed (N, >=10) kNN ids of the *raw*
+        database, reused for the AntiHub k-occurrence pass (the tuner
+        computes them once and threads them through every trial instead of
+        paying an O(N^2) pass per structural build).
+        """
         t0 = time.perf_counter()
         key = key if key is not None else jax.random.PRNGKey(0)
         p = self.params
@@ -64,7 +83,8 @@ class TunedGraphIndex:
 
         if p.antihub_keep < 1.0:
             self.kept_idx = antihub_mod.antihub_keep_indices(
-                data, p.antihub_keep, k=10)
+                data, p.antihub_keep, k=10, knn_ids=antihub_knn_ids,
+                backend=p.knn_backend, key=jax.random.fold_in(key, 17))
             sub = data[self.kept_idx]
         else:
             self.kept_idx = jnp.arange(n, dtype=jnp.int32)
@@ -78,12 +98,45 @@ class TunedGraphIndex:
             base = sub
         self.base = base
 
-        _, knn_ids = knn_graph(base, p.build_knn_k)
+        _, knn_ids = build_knn(base, p.build_knn_k, backend=p.knn_backend,
+                               key=jax.random.fold_in(key, 23))
+        self.knn_ids = knn_ids
         self.graph = build_nsg(base, knn_ids, degree=p.graph_degree,
-                               n_candidates=p.build_candidates)
+                               n_candidates=p.build_candidates,
+                               alpha=p.alpha)
         self.eps = fit_entry_points(key, base, p.ep_clusters)
         self.build_seconds = time.perf_counter() - t0
         return self
+
+    # -- rebuild-free derivation ("prune, don't rebuild") ------------------
+    def with_graph(self, graph: NSGGraph,
+                   eps: Optional[EntryPointSelector] = None):
+        """Shallow clone serving a different (derived) graph.
+
+        Shares base vectors / PCA / kept ids with ``self`` — the reprune
+        serving path, so one structural build can back many
+        (alpha, degree) trials.
+        """
+        out = copy.copy(self)
+        out.graph = graph
+        if eps is not None:
+            out.eps = eps
+        return out
+
+    def reprune(self, *, alpha: float = 1.0,
+                degree: Optional[int] = None) -> "TunedGraphIndex":
+        """Derive a lower-degree / larger-alpha index with NO rebuild.
+
+        O(N * R) gather-distances + one vmapped occlusion pass +
+        connectivity repair — the §5.3 rebuild cost collapses to this.
+        """
+        assert self.graph is not None, "fit() first"
+        g = reprune_nsg(self.base, self.graph, alpha=alpha, degree=degree,
+                        knn_ids=self.knn_ids)
+        out = self.with_graph(g)
+        out.params = replace(self.params, alpha=alpha,
+                             graph_degree=g.neighbors.shape[1])
+        return out
 
     # -- search -----------------------------------------------------------
     def project(self, queries: jax.Array) -> jax.Array:

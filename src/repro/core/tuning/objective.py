@@ -1,12 +1,21 @@
 """The ANN tuning objective (paper Eq. 1-3): measure QPS + Recall@k for a
 parameter assignment.
 
-Beyond-paper improvement (addresses their §5.3 limitation — "we have to
-rebuild the index every time D and alpha change"): builds are cached by the
-*structural* sub-key (pca_dim, antihub_keep, graph params). Trials that only
-move `ep_clusters` or `ef_search` re-fit entry points / re-run search on the
-cached graph, which is orders of magnitude cheaper. Entry-point selectors are
-additionally cached per (structure, k).
+Beyond-paper improvement (their §5.3 limitation — "we have to rebuild the
+index every time D and alpha change"): builds are cached by the *structural*
+sub-key (pca_dim, antihub_keep, kNN/candidate build params), and the cached
+build is made ONCE at the structural maximum (base graph_degree, pruning
+alpha=1 — the densest member of the α-reachable family). Trials that move:
+
+  * ``graph_degree`` / ``alpha``  — derive their graph from the cached one
+    via ``reprune`` (O(N*R), no candidate pools, no rebuild);
+  * ``ep_clusters``               — re-fit entry points on the cached base
+    (additionally cached per (structure, k));
+  * ``ef_search``                 — re-run search only.
+
+So the only knobs that force a real rebuild are the paper's D (pca_dim) and
+AntiHub alpha (antihub_keep) — and the raw database's kNN table feeding the
+AntiHub pass is itself computed once and threaded through every fit.
 """
 from __future__ import annotations
 
@@ -25,11 +34,18 @@ from repro.core.tuning.space import Float, Int, SearchSpace
 from repro.core.tuning.study import Trial
 
 
-def default_space(dim: int, n: int) -> SearchSpace:
-    """The paper's knobs: D, alpha, k (+ ef, which Faiss exposes too)."""
+def default_space(dim: int, n: int, max_degree: int = 32) -> SearchSpace:
+    """The paper's knobs (D, alpha, k, ef) + the two rebuild-free graph
+    knobs the reprune path makes cheap (graph_degree, pruning alpha).
+
+    ``max_degree`` must match the objective's structural ceiling (its base
+    ``graph_degree``); sampled degrees above it are clamped.
+    """
     return (SearchSpace()
             .add("pca_dim", Int(max(8, dim // 4), dim))
             .add("antihub_keep", Float(0.7, 1.0))
+            .add("graph_degree", Int(max(4, max_degree // 4), max_degree))
+            .add("alpha", Float(1.0, 1.4))
             .add("ep_clusters", Int(1, max(2, min(256, n // 20)), log=True))
             .add("ef_search", Int(16, 256, log=True)))
 
@@ -40,7 +56,8 @@ class EvalResult:
     qps: float
     build_seconds: float
     mem_bytes: int
-    cached_build: bool
+    cached_build: bool       # True: no structural build ran for this trial
+    repruned: bool = False   # True: graph derived via reprune (not rebuilt)
 
 
 class AnnObjective:
@@ -48,6 +65,10 @@ class AnnObjective:
 
     qps_repeats: the paper measures "average QPS measured ten times" — we
     default to 5 timed repeats after 1 warmup (CPU jit).
+
+    ``base_params.graph_degree`` is the structural ceiling: the one real
+    build per structure happens at that degree with pruning alpha=1, and
+    every (graph_degree, alpha) trial is derived from it by ``reprune``.
     """
 
     def __init__(self, data, queries, k: int = 10,
@@ -62,37 +83,81 @@ class AnnObjective:
         self.mem_limit = mem_limit_bytes
         self.key = jax.random.PRNGKey(seed)
         self.base = base_params or IndexParams(pca_dim=data.shape[1])
+        self.max_degree = self.base.graph_degree
         _, self.true_i = FlatIndex(data).search(queries, k)
         self._build_cache: Dict[tuple, TunedGraphIndex] = {}
+        self._graph_cache: Dict[tuple, object] = {}
         self._ep_cache: Dict[tuple, object] = {}
+        self._antihub_ids = None
         self.eval_log: list = []
 
     # -- internals ---------------------------------------------------------
     def _structural_key(self, p: IndexParams) -> tuple:
-        return (p.pca_dim, round(p.antihub_keep, 4), p.graph_degree,
-                p.build_knn_k, p.build_candidates)
+        return (p.pca_dim, round(p.antihub_keep, 4), p.build_knn_k,
+                p.build_candidates, p.knn_backend)
 
-    def _get_index(self, p: IndexParams) -> Tuple[TunedGraphIndex, bool]:
+    def _antihub_knn_ids(self, p: IndexParams):
+        """The raw database's kNN table for AntiHub — computed once ever."""
+        if self._antihub_ids is None:
+            from repro.core.build import build_knn
+            _, self._antihub_ids = build_knn(
+                self.data, 10, backend=p.knn_backend,
+                key=jax.random.fold_in(self.key, 17))
+        return self._antihub_ids
+
+    def _get_index(self, p: IndexParams) -> Tuple[TunedGraphIndex, bool,
+                                                  bool]:
         skey = self._structural_key(p)
         if skey in self._build_cache:
-            idx = self._build_cache[skey]
+            full = self._build_cache[skey]
             cached = True
         else:
-            idx = TunedGraphIndex(replace(p, ep_clusters=1)).fit(
-                self.data, self.key)
-            self._build_cache[skey] = idx
+            structural = replace(p, ep_clusters=1, alpha=1.0,
+                                 graph_degree=self.max_degree)
+            ah_ids = (self._antihub_knn_ids(p)
+                      if p.antihub_keep < 1.0 else None)
+            full = TunedGraphIndex(structural).fit(
+                self.data, self.key, antihub_knn_ids=ah_ids)
+            self._build_cache[skey] = full
+            # the build already fit the ep_clusters=1 selector: seed the
+            # cache so the first k=1 trial doesn't refit it
+            self._ep_cache[skey + (1,)] = full.eps
             cached = False
+
+        degree = min(p.graph_degree, self.max_degree)
+        alpha = float(p.alpha)
+        repruned = (degree != self.max_degree) or (alpha != 1.0)
+        if repruned:
+            gkey = skey + (degree, round(alpha, 4))
+            if gkey not in self._graph_cache:
+                self._graph_cache[gkey] = full.reprune(
+                    alpha=alpha, degree=degree).graph
+            idx = full.with_graph(self._graph_cache[gkey])
+        else:
+            idx = full.with_graph(full.graph)
+
         ekey = skey + (p.ep_clusters,)
         if ekey not in self._ep_cache:
             self._ep_cache[ekey] = fit_entry_points(
                 self.key, idx.base, p.ep_clusters)
         idx.eps = self._ep_cache[ekey]
-        return idx, cached
+        return idx, cached, repruned
 
     def evaluate(self, params: Dict) -> EvalResult:
+        params = dict(params)
+        if params.get("graph_degree", 0) > self.max_degree:
+            # keep the log honest: record the degree actually evaluated
+            import warnings
+            warnings.warn(
+                f"graph_degree={params['graph_degree']} exceeds the "
+                f"structural ceiling {self.max_degree} (base graph_degree);"
+                f" clamping — pass max_degree={self.max_degree} to "
+                f"default_space to avoid sampling a dead range",
+                RuntimeWarning, stacklevel=2)
+            params["graph_degree"] = self.max_degree
         p = replace(self.base, **params)
         t0 = time.perf_counter()
-        idx, cached = self._get_index(p)
+        idx, cached, repruned = self._get_index(p)
         build_s = time.perf_counter() - t0
         ef = max(p.ef_search, self.k)
         d, i = idx.search(self.queries, self.k, ef=ef)      # warmup+compile
@@ -106,7 +171,8 @@ class AnnObjective:
         qps = self.queries.shape[0] / float(np.median(times))
         rec = recall_at_k(i, self.true_i)
         res = EvalResult(recall=rec, qps=qps, build_seconds=build_s,
-                         mem_bytes=idx.memory_bytes(), cached_build=cached)
+                         mem_bytes=idx.memory_bytes(), cached_build=cached,
+                         repruned=repruned)
         self.eval_log.append((dict(params), res))
         return res
 

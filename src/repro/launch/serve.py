@@ -43,6 +43,11 @@ def main():
                     help="comma-separated batch-shape buckets, or 'auto' "
                          "for powers of two up to 8x --batch, or 'off' "
                          "(ann family only)")
+    ap.add_argument("--knn-backend", default=None,
+                    choices=["exact", "nndescent", "auto"],
+                    help="override the build-time kNN-graph backend for "
+                         "graph specs (ann family only); the spec's ,ND<K> "
+                         "suffix is the in-grammar equivalent")
     args = ap.parse_args()
     spec = get_arch(args.arch)
     cfg = spec.smoke_config
@@ -84,7 +89,8 @@ def main():
         from repro.serve.batching import MicroBatchQueue, pow2_buckets
         data = clustered_vectors(key, 4000, 48, n_clusters=16)
         queries = queries_like(jax.random.PRNGKey(1), data, args.batch * 16)
-        idx = build_index(args.spec, data, key=key)
+        idx = build_index(args.spec, data, key=key,
+                          knn_backend=args.knn_backend)
         if args.buckets == "off":
             buckets = None
         elif args.buckets == "auto":

@@ -36,6 +36,14 @@ def main():
     ap.add_argument("--spec", default=None,
                     help="factory spec: tune SearchParams for this index "
                          "instead of the pipeline's build knobs")
+    ap.add_argument("--knn-backend", default="auto",
+                    choices=["exact", "nndescent", "auto"],
+                    help="build-time kNN-graph backend (core.build): exact "
+                         "O(N^2) pass, NN-Descent refinement, or auto by N")
+    ap.add_argument("--max-degree", type=int, default=16,
+                    help="structural graph-degree ceiling: the single real "
+                         "build per structure happens here; degree/alpha "
+                         "trials reprune down from it")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -47,11 +55,14 @@ def main():
                                     qps_repeats=3, key=key)
         space = obj.space
     else:
-        base = IndexParams(pca_dim=args.dim, graph_degree=16, build_knn_k=16,
-                           build_candidates=32, ef_search=64)
+        base = IndexParams(pca_dim=args.dim, graph_degree=args.max_degree,
+                           build_knn_k=args.max_degree,
+                           build_candidates=2 * args.max_degree,
+                           ef_search=64, knn_backend=args.knn_backend)
         obj = AnnObjective(data, queries, k=10, base_params=base,
                            recall_floor=args.recall_floor, qps_repeats=3)
-        space = default_space(args.dim, args.n)
+        space = default_space(args.dim, args.n,
+                              max_degree=args.max_degree)
 
     if args.mode == "single":
         study = Study(space, TPESampler(seed=0, n_startup=5))
@@ -70,9 +81,24 @@ def main():
     for t in sorted(results, key=lambda t: -t.values[0]):
         r = t.user_attrs["result"]
         print(f"{str(t.params):60s} {r.recall:.4f}  {r.qps:.0f}")
-    cached = sum(1 for _, r in obj.eval_log if r.cached_build)
-    print(f"\n{len(obj.eval_log)} evals, {cached} reused cached builds "
-          f"(the §5.3 rebuild cost fix)")
+
+    # build-cache efficacy: what each trial actually paid for its graph
+    print(f"\n-- build log ({len(obj.eval_log)} evals) --")
+    for i, (params, r) in enumerate(obj.eval_log):
+        if not r.cached_build:
+            tag = "full-build"
+        elif getattr(r, "repruned", False):
+            tag = "reprune"
+        else:
+            tag = "cached"
+        print(f"trial {i:02d} {tag:10s} build={r.build_seconds:6.2f}s "
+              f"recall={r.recall:.4f} qps={r.qps:.0f} {params}")
+    full = sum(1 for _, r in obj.eval_log if not r.cached_build)
+    repr_ = sum(1 for _, r in obj.eval_log
+                if r.cached_build and getattr(r, "repruned", False))
+    cached = len(obj.eval_log) - full - repr_
+    print(f"{full} structural builds, {repr_} reprune derivations, "
+          f"{cached} pure cache hits (the §5.3 rebuild cost fix)")
     if args.out:
         with open(args.out, "w") as f:
             json.dump([{"params": t.params, "values": t.values}

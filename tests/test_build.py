@@ -1,0 +1,318 @@
+"""Tests for the core.build substrate: batched NN-Descent, α-RNG pruning,
+and the rebuild-free reprune path ("Prune, Don't Rebuild")."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FlatIndex, IndexParams, TunedGraphIndex, build_index, recall_at_k,
+)
+from repro.core.build import (
+    AUTO_NND_MIN_N, build_knn, knn_graph_recall as graph_recall, nn_descent,
+    reprune, resolve_backend,
+)
+from repro.core.build.prune import alpha_prune, pairwise_rows_sqdist
+from repro.core.knn_graph import knn_graph
+from repro.core.nsg import mrng_prune
+
+
+# ------------------------------------------------------------- nn_descent
+
+
+def test_nn_descent_contract(ann_data):
+    data = ann_data["data"]
+    d, i = nn_descent(data, 10, key=jax.random.PRNGKey(0))
+    d, i = np.asarray(d), np.asarray(i)
+    n = data.shape[0]
+    assert i.shape == d.shape == (n, 10)
+    assert (i != np.arange(n)[:, None]).all()          # self excluded
+    assert (i < n).all()
+    assert (np.diff(d, axis=1) >= -1e-6).all()         # ascending rows
+    for row in range(0, n, 37):                        # no dup ids per row
+        v = i[row][i[row] >= 0]
+        assert len(np.unique(v)) == len(v)
+
+
+def test_nn_descent_recall_vs_exact(ann_data):
+    """ISSUE acceptance (tier-1 scale): NN-Descent kNN-graph recall >= 0.9
+    against the exact graph on synthetic data."""
+    data = ann_data["data"]
+    _, exact_ids = knn_graph(data, 10)
+    _, nnd_ids = nn_descent(data, 10, key=jax.random.PRNGKey(0))
+    rec = graph_recall(np.asarray(nnd_ids), np.asarray(exact_ids))
+    assert rec >= 0.9, f"NN-Descent graph recall {rec:.4f} < 0.9"
+
+
+def test_nn_descent_tiny_n_pads():
+    data = jax.random.normal(jax.random.PRNGKey(0), (6, 4))
+    d, i = nn_descent(data, 8)
+    assert i.shape == (6, 8)
+    i = np.asarray(i)
+    assert (i[:, :5] >= 0).all()                       # n-1 real neighbors
+    assert (i[:, 5:] == -1).all()                      # padded out to k
+    assert not np.isfinite(np.asarray(d)[:, 5:]).any()
+
+
+def test_build_knn_dispatch_and_stats(ann_data):
+    data = ann_data["data"][:500]
+    n = data.shape[0]
+    d, i, st = build_knn(data, 5, backend="exact", with_stats=True)
+    assert st.backend == "exact" and st.distance_evals == n * n
+    d2, i2 = build_knn(data, 5, backend="exact")
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i2))
+    _, _, st2 = build_knn(data, 5, backend="nndescent", with_stats=True,
+                          key=jax.random.PRNGKey(1))
+    assert st2.backend == "nndescent" and st2.rounds >= 1
+    assert st2.distance_evals > 0
+    with pytest.raises(ValueError, match="unknown knn backend"):
+        build_knn(data, 5, backend="bogus")
+
+
+def test_auto_backend_threshold():
+    assert resolve_backend("auto", AUTO_NND_MIN_N - 1) == "exact"
+    assert resolve_backend("auto", AUTO_NND_MIN_N) == "nndescent"
+    assert resolve_backend("exact", 10**9) == "exact"
+    assert resolve_backend("nndescent", 16) == "nndescent"
+
+
+# ------------------------------------------------- alpha_prune / reprune
+
+
+def _sorted_pool(data, n, L, seed):
+    cand = jax.random.randint(jax.random.PRNGKey(seed), (n, L), 0,
+                              n).astype(jnp.int32)
+    cd = pairwise_rows_sqdist(data, data, cand)
+    order = jnp.argsort(cd, axis=1, stable=True)
+    return (jnp.take_along_axis(cand, order, axis=1),
+            jnp.take_along_axis(cd, order, axis=1))
+
+
+def test_alpha_prune_at_one_is_mrng_bitwise(ann_data):
+    """ISSUE acceptance: alpha=1 reproduces the MRNG rule bit-for-bit."""
+    data = ann_data["data"][:300]
+    cand, cd = _sorted_pool(data, 300, 24, seed=5)
+    nodes = jnp.arange(300, dtype=jnp.int32)
+    a = alpha_prune(data, nodes, cand, cd, degree=12, alpha=1.0)
+    b = mrng_prune(data, nodes, cand, cd, degree=12)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_reprune_alpha1_reproduces_mrng_prefix(ann_data):
+    """ISSUE acceptance: reprune(alpha=1, degree=R) of the cached
+    max-degree graph is bit-identical to MRNG-pruning the original pools
+    at degree R — the rebuild-free derivation is exact at alpha=1."""
+    data = ann_data["data"][:300]
+    cand, cd = _sorted_pool(data, 300, 32, seed=6)
+    nodes = jnp.arange(300, dtype=jnp.int32)
+    full = alpha_prune(data, nodes, cand, cd, degree=16)
+    same = reprune(data, full, alpha=1.0, degree=16)
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(full))
+    for r in (8, 4):
+        direct = mrng_prune(data, nodes, cand, cd, degree=r)
+        derived = reprune(data, full, alpha=1.0, degree=r)
+        np.testing.assert_array_equal(np.asarray(derived),
+                                      np.asarray(direct))
+
+
+def test_reprune_alpha_edges_subset_of_cached(ann_data):
+    data = ann_data["data"][:300]
+    cand, cd = _sorted_pool(data, 300, 32, seed=7)
+    nodes = jnp.arange(300, dtype=jnp.int32)
+    full = np.asarray(alpha_prune(data, nodes, cand, cd, degree=16))
+    pruned = np.asarray(reprune(data, jnp.asarray(full), alpha=1.3))
+    n_edges_full = (full >= 0).sum()
+    n_edges_pruned = (pruned >= 0).sum()
+    assert 0 < n_edges_pruned < n_edges_full
+    for row in range(300):
+        kept = set(pruned[row][pruned[row] >= 0])
+        assert kept <= set(full[row][full[row] >= 0])
+
+
+def test_reprune_property_hypothesis():
+    """Property over random pools: alpha=1/degree=R reprune == mrng_prune,
+    derived edges always a subset of the cached adjacency, no dup ids."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10**6), alpha=st.floats(1.0, 1.6),
+           degree=st.integers(2, 12))
+    def prop(seed, alpha, degree):
+        data = jax.random.normal(jax.random.PRNGKey(seed), (80, 6))
+        cand, cd = _sorted_pool(data, 80, 16, seed=seed + 1)
+        nodes = jnp.arange(80, dtype=jnp.int32)
+        full = alpha_prune(data, nodes, cand, cd, degree=12)
+        derived = np.asarray(reprune(data, full, alpha=alpha, degree=degree))
+        direct = np.asarray(mrng_prune(data, nodes, cand, cd, degree=degree))
+        fullnp = np.asarray(full)
+        if alpha == 1.0:
+            np.testing.assert_array_equal(derived, direct)
+        for row in range(80):
+            kept = derived[row][derived[row] >= 0]
+            assert len(np.unique(kept)) == len(kept)
+            assert set(kept) <= set(fullnp[row][fullnp[row] >= 0])
+
+    prop()
+
+
+@pytest.fixture(scope="module")
+def built_index(ann_data):
+    return TunedGraphIndex(IndexParams(
+        pca_dim=32, graph_degree=16, build_knn_k=12, build_candidates=32,
+        ef_search=48)).fit(ann_data["data"])
+
+
+def test_recall_monotone_nonincreasing_in_alpha(built_index, ann_data):
+    """ISSUE satellite: larger pruning alpha -> sparser derived graph ->
+    recall must not increase (the knob trades recall for QPS)."""
+    recalls = []
+    for alpha in (1.0, 1.2, 1.35, 1.5):
+        d = built_index.reprune(alpha=alpha)
+        r = recall_at_k(d.search(ann_data["queries"], 10)[1],
+                        ann_data["true_i"])
+        recalls.append(float(r))
+    for lo, hi in zip(recalls[1:], recalls[:-1]):
+        assert lo <= hi + 1e-9, f"recall increased with alpha: {recalls}"
+    assert recalls[-1] < recalls[0]          # the knob actually bites
+
+
+def test_reprune_degree_shares_base_arrays(built_index):
+    """with_graph clones share vectors: reprune must not copy the base."""
+    d = built_index.reprune(degree=8)
+    assert d.base is built_index.base
+    assert d.kept_idx is built_index.kept_idx
+    assert d.graph.neighbors.shape[1] == 8
+    assert d.params.graph_degree == 8
+    assert built_index.graph.neighbors.shape[1] == 16    # original untouched
+
+
+def test_repruned_index_stays_connected(built_index):
+    """Connectivity repair runs after reprune: BFS from the medoid must
+    reach every node even on an aggressively pruned derived graph."""
+    d = built_index.reprune(alpha=1.4, degree=6)
+    nbrs = np.asarray(d.graph.neighbors)
+    n = nbrs.shape[0]
+    seen = np.zeros(n, bool)
+    stack = [int(d.graph.medoid)]
+    seen[stack[0]] = True
+    while stack:
+        u = stack.pop()
+        for v in nbrs[u]:
+            if v >= 0 and not seen[v]:
+                seen[v] = True
+                stack.append(int(v))
+    assert seen.all()
+
+
+# ----------------------------------------------- pipeline + factory wiring
+
+
+def test_pipeline_nndescent_close_to_exact(ann_data):
+    """Fast-scale version of the N=20k acceptance: the NN-Descent-built
+    pipeline stays within 0.02 recall@10 of the exact-built one."""
+    base = dict(pca_dim=32, graph_degree=12, build_knn_k=12,
+                build_candidates=32, ef_search=64)
+    r = {}
+    for backend in ("exact", "nndescent"):
+        idx = TunedGraphIndex(IndexParams(knn_backend=backend, **base)).fit(
+            ann_data["data"], jax.random.PRNGKey(0))
+        r[backend] = float(recall_at_k(
+            idx.search(ann_data["queries"], 10)[1], ann_data["true_i"]))
+    assert r["exact"] - r["nndescent"] <= 0.02, r
+
+
+def test_antihub_accepts_precomputed_ids(ann_data):
+    from repro.core.antihub import antihub_keep_indices, k_occurrence
+    data = ann_data["data"][:400]
+    _, ids = knn_graph(data, 10)
+    occ_pre = k_occurrence(data, 10, knn_ids=ids)
+    occ_own = k_occurrence(data, 10)
+    np.testing.assert_array_equal(np.asarray(occ_pre), np.asarray(occ_own))
+    kept_pre = antihub_keep_indices(data, 0.8, k=10, knn_ids=ids)
+    kept_own = antihub_keep_indices(data, 0.8, k=10)
+    np.testing.assert_array_equal(np.asarray(kept_pre),
+                                  np.asarray(kept_own))
+    with pytest.raises(ValueError, match="columns"):
+        k_occurrence(data, 10, knn_ids=ids[:, :4])
+
+
+def test_fit_entry_points_clamps_k_above_n():
+    from repro.core.entry_points import fit_entry_points
+    data = jax.random.normal(jax.random.PRNGKey(0), (6, 4))
+    with pytest.warns(RuntimeWarning, match="clamping"):
+        eps = fit_entry_points(jax.random.PRNGKey(1), data, 10)
+    assert eps.n_clusters <= 6
+    sel = np.asarray(eps.select(data))
+    assert ((sel >= 0) & (sel < 6)).all()
+
+
+def test_pipeline_survives_ep_clusters_above_n():
+    """Regression: a tuner proposing ep_clusters > N (after AntiHub
+    subsampling) must not crash the build."""
+    data = jax.random.normal(jax.random.PRNGKey(2), (40, 8))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        idx = TunedGraphIndex(IndexParams(
+            pca_dim=8, antihub_keep=0.5, ep_clusters=64, graph_degree=6,
+            build_knn_k=6, build_candidates=12)).fit(data)
+    d, i = idx.search(data[:5], 3)
+    assert ((np.asarray(i) >= 0) & (np.asarray(i) < 40)).all()
+
+
+def test_factory_alpha_and_nd_grammar():
+    from repro.core.index_api import parse_spec
+    _, idx = parse_spec("NSG16a1.2,ND12", 32)
+    assert idx.params.graph_degree == 16
+    assert idx.params.alpha == 1.2
+    assert idx.params.knn_backend == "nndescent"
+    assert idx.params.build_knn_k == 12
+    _, plain = parse_spec("NSG16", 32)
+    assert plain.params.alpha == 1.0
+    assert plain.params.knn_backend == "auto"
+
+
+def test_build_index_knn_backend_override(ann_data):
+    data = ann_data["data"][:600]
+    idx = build_index("NSG12", data, key=jax.random.PRNGKey(0),
+                      knn_backend="nndescent")
+    assert idx.params.knn_backend == "nndescent"
+    _, ti = FlatIndex(data).search(ann_data["queries"], 10)
+    r = recall_at_k(idx.search(ann_data["queries"], 10)[1], ti)
+    assert r >= 0.9
+
+
+# --------------------------------------------------- N=20k acceptance
+
+
+@pytest.mark.slow
+def test_nndescent_20k_acceptance():
+    """ISSUE acceptance at N=20k: >= 10x fewer distance evaluations than
+    exact, kNN-graph recall >= 0.9, and a TunedGraphIndex built on the
+    NN-Descent graph within 0.02 recall@10 of the exact-built one."""
+    from repro.data import clustered_vectors, queries_like
+    n, dim = 20000, 16
+    data = clustered_vectors(jax.random.PRNGKey(0), n, dim, n_clusters=32)
+    queries = queries_like(jax.random.PRNGKey(1), data, 96)
+    _, exact_ids, ex_stats = build_knn(data, 10, backend="exact",
+                                       with_stats=True)
+    _, nnd_ids, st = build_knn(data, 10, backend="nndescent",
+                               key=jax.random.PRNGKey(2), with_stats=True,
+                               u_slots=64, init_passes=6, rounds=12)
+    assert st.distance_evals * 10 <= ex_stats.distance_evals, (
+        f"NN-Descent used {st.distance_evals} evals, exact "
+        f"{ex_stats.distance_evals} — less than 10x apart")
+    rec = graph_recall(np.asarray(nnd_ids), np.asarray(exact_ids))
+    assert rec >= 0.9, f"20k NN-Descent graph recall {rec:.4f} < 0.9"
+
+    _, true_i = FlatIndex(data).search(queries, 10)
+    base = dict(pca_dim=dim, graph_degree=12, build_knn_k=12,
+                build_candidates=24, ef_search=64)
+    r = {}
+    for backend in ("exact", "nndescent"):
+        idx = TunedGraphIndex(IndexParams(knn_backend=backend, **base)).fit(
+            data, jax.random.PRNGKey(0))
+        r[backend] = float(recall_at_k(idx.search(queries, 10)[1], true_i))
+    assert r["exact"] - r["nndescent"] <= 0.02, r

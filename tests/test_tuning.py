@@ -119,3 +119,45 @@ def test_ann_objective_build_cache(ann_data):
     assert r2.cached_build
     assert r2.build_seconds < r1.build_seconds
     assert 0.0 <= r1.recall <= 1.0 and r1.qps > 0
+
+
+@pytest.mark.slow
+def test_single_structural_build_for_cheap_knobs(ann_data):
+    """ISSUE acceptance: a study varying only graph_degree / alpha /
+    ep_clusters / ef_search performs EXACTLY ONE structural build — degree
+    and alpha trials are served by reprune derivations of the one cached
+    max-degree graph."""
+    from repro.core.pipeline import IndexParams
+    from repro.core.tuning import AnnObjective
+
+    base = IndexParams(pca_dim=32, graph_degree=16, build_knn_k=12,
+                       build_candidates=32, ef_search=48)
+    obj = AnnObjective(ann_data["data"], ann_data["queries"], k=10,
+                       base_params=base, qps_repeats=1)
+    trials = [
+        {"graph_degree": 16, "alpha": 1.0, "ep_clusters": 1,
+         "ef_search": 48},
+        {"graph_degree": 8, "alpha": 1.0, "ep_clusters": 1,
+         "ef_search": 48},
+        {"graph_degree": 16, "alpha": 1.2, "ep_clusters": 4,
+         "ef_search": 64},
+        {"graph_degree": 12, "alpha": 1.1, "ep_clusters": 8,
+         "ef_search": 32},
+        {"graph_degree": 8, "alpha": 1.0, "ep_clusters": 1,
+         "ef_search": 96},            # repeat structure+graph: cache hit
+    ]
+    results = [obj.evaluate(t) for t in trials]
+    full_builds = [r for r in results if not r.cached_build]
+    assert len(full_builds) == 1, "cheap knobs must not trigger rebuilds"
+    assert results[0] is full_builds[0]
+    assert not results[0].repruned           # trial 0 IS the cached maximum
+    for r in results[1:]:
+        assert r.cached_build
+    assert results[1].repruned and results[2].repruned and results[3].repruned
+    # derived graphs honor the requested degree
+    idx8, _, _ = obj._get_index(
+        type(base)(pca_dim=32, graph_degree=8, build_knn_k=12,
+                   build_candidates=32, ef_search=48))
+    assert idx8.graph.neighbors.shape[1] == 8
+    # recall stays sane on the derived graphs
+    assert all(0.0 <= r.recall <= 1.0 for r in results)
