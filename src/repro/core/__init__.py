@@ -11,7 +11,8 @@ Public surface:
 """
 from repro.core.beam_search import beam_search  # noqa: F401
 from repro.core.build import (  # noqa: F401
-    BuildStats, alpha_prune, build_knn, nn_descent, reprune, reprune_nsg,
+    BuildStats, alpha_prune, build_knn, nn_descent, nnd_candidate_pools,
+    reprune, reprune_family, reprune_nsg,
 )
 from repro.core.flat import FlatIndex, recall_at_k  # noqa: F401
 from repro.core.index_api import (  # noqa: F401
@@ -19,5 +20,5 @@ from repro.core.index_api import (  # noqa: F401
     list_index_specs, register_index,
 )
 from repro.core.pipeline import (  # noqa: F401
-    IndexParams, TunedGraphIndex, build_vanilla_nsg,
+    IndexParams, TunedGraphIndex, build_vanilla_nsg, structural_build_count,
 )

@@ -22,15 +22,18 @@ from typing import Optional, Tuple
 import jax
 
 from repro.core.build.nn_descent import BuildStats, nn_descent
+from repro.core.build.pools import nnd_candidate_pools
 from repro.core.build.prune import (
-    alpha_prune, mark_dups, pairwise_rows_sqdist, prune_in_chunks, reprune,
-    reprune_nsg, sorted_adjacency,
+    alpha_prune, mark_dups, nsg_from_neighbors, pairwise_rows_sqdist,
+    prune_in_chunks, reprune, reprune_family, reprune_nsg,
+    sorted_adjacency,
 )
 
 __all__ = [
     "AUTO_NND_MIN_N", "BuildStats", "alpha_prune", "build_knn",
-    "knn_graph_recall", "mark_dups", "nn_descent", "pairwise_rows_sqdist",
-    "prune_in_chunks", "reprune", "reprune_nsg", "resolve_backend",
+    "knn_graph_recall", "mark_dups", "nn_descent", "nnd_candidate_pools",
+    "nsg_from_neighbors", "pairwise_rows_sqdist", "prune_in_chunks",
+    "reprune", "reprune_family", "reprune_nsg", "resolve_backend",
     "sorted_adjacency",
 ]
 

@@ -54,6 +54,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.topk_merge import resolve_merge_backend, topk_merge
+
 
 def _host_sum(per_block_counts) -> int:
     """Sum per-block int32 eval counts in Python ints (no int32 wrap)."""
@@ -70,43 +72,24 @@ class BuildStats(NamedTuple):
     update_rate: float     # last round's fraction of changed table entries
 
 
-def _merge(cur_i, cur_d, cur_f, cand_i, cand_d, k):
+def _merge(cur_i, cur_d, cur_f, cand_i, cand_d, k, backend):
     """Merge (B, K) current rows with (B, M) candidates -> new top-k rows.
 
     Dedup keeps the *existing* copy of an id (fresh=False) so re-proposed
-    neighbors are not resampled as new next round.
+    neighbors are not resampled as new next round. The primitive lives in
+    ``kernels/topk_merge``: a stable-argsort jnp path (the CPU default,
+    bit-identical to the historical inline merge) and a Pallas bitonic
+    network (the TPU default — XLA sorts don't lower inside kernels).
     """
-    ids = jnp.concatenate([cur_i, cand_i], axis=1)
-    ds = jnp.concatenate([cur_d, cand_d], axis=1)
-    fresh = jnp.concatenate(
-        [cur_f, jnp.ones(cand_i.shape, bool)], axis=1)
-    # lexsort by (id, fresh): stable sort on the secondary key first
-    ord0 = jnp.argsort(fresh, axis=1, stable=True)           # old copies first
-    ids = jnp.take_along_axis(ids, ord0, axis=1)
-    ds = jnp.take_along_axis(ds, ord0, axis=1)
-    fresh = jnp.take_along_axis(fresh, ord0, axis=1)
-    ord1 = jnp.argsort(ids, axis=1, stable=True)
-    ids = jnp.take_along_axis(ids, ord1, axis=1)
-    ds = jnp.take_along_axis(ds, ord1, axis=1)
-    fresh = jnp.take_along_axis(fresh, ord1, axis=1)
-    dup = jnp.concatenate(
-        [jnp.zeros((ids.shape[0], 1), bool), ids[:, 1:] == ids[:, :-1]],
-        axis=1)
-    ds = jnp.where(dup | (ids < 0), jnp.inf, ds)
-    ord2 = jnp.argsort(ds, axis=1, stable=True)[:, :k]
-    out_i = jnp.take_along_axis(ids, ord2, axis=1)
-    out_d = jnp.take_along_axis(ds, ord2, axis=1)
-    out_f = jnp.take_along_axis(fresh, ord2, axis=1)
-    out_i = jnp.where(jnp.isfinite(out_d), out_i, -1)
-    out_f = out_f & (out_i >= 0)
-    return out_i, out_d, out_f
+    return topk_merge(cur_i, cur_d, cur_f, cand_i, cand_d, k,
+                      backend=backend)
 
 
 def _pad_rows(x, rows, fill):
     return jnp.pad(x, ((0, rows - x.shape[0]), (0, 0)), constant_values=fill)
 
 
-def _fold_merge(ids, dists, fresh, cand_i, cand_d, block):
+def _fold_merge(ids, dists, fresh, cand_i, cand_d, block, backend):
     """Blockwise ``_merge`` of per-row candidates (with known dists)."""
     n, k = ids.shape
     nb = -(-n // block)
@@ -114,7 +97,7 @@ def _fold_merge(ids, dists, fresh, cand_i, cand_d, block):
 
     def mstep(args):
         ci, cd, cf, bi, bd = args
-        return _merge(ci, cd, cf, bi, bd, k)
+        return _merge(ci, cd, cf, bi, bd, k, backend)
 
     out_i, out_d, out_f = jax.lax.map(mstep, (
         _pad_rows(ids, nb * block, -1).reshape(nb, block, k),
@@ -127,8 +110,9 @@ def _fold_merge(ids, dists, fresh, cand_i, cand_d, block):
             out_f.reshape(nb * block, k)[:n])
 
 
-@functools.partial(jax.jit, static_argnames=("bsize", "block"))
-def _rp_block_join(key, data, norms, ids, dists, fresh, bsize, block):
+@functools.partial(jax.jit, static_argnames=("bsize", "block", "backend"))
+def _rp_block_join(key, data, norms, ids, dists, fresh, bsize, block,
+                   backend):
     """One random-projection block join (the EFANNA-style init pass).
 
     Sort all points along a random 1-D projection, cut the order into
@@ -166,14 +150,57 @@ def _rp_block_join(key, data, norms, ids, dists, fresh, bsize, block):
                       ).at[tgt].set(ci.reshape(-1, bsize), mode="drop")
     cand_d = jnp.full((n, bsize), jnp.inf, jnp.float32
                       ).at[tgt].set(cd.reshape(-1, bsize), mode="drop")
-    out = _fold_merge(ids, dists, fresh, cand_i, cand_d, block)
+    out = _fold_merge(ids, dists, fresh, cand_i, cand_d, block, backend)
     return out + (n_eval,)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("s_fwd", "s_rev", "u_slots", "block"))
+@jax.jit
+def _seed_dists_chunk(data, norms, rows, init_chunk):
+    """(b, I) init ids for ``rows`` -> (ids, dists, n_valid), distances in
+    ``data``'s space."""
+    valid = ((init_chunk >= 0) & (init_chunk < data.shape[0])
+             & (init_chunk != rows[:, None]))
+    safe = jnp.maximum(jnp.where(valid, init_chunk, 0), 0)
+    vecs = data[safe].astype(jnp.float32)
+    q = data[rows].astype(jnp.float32)
+    d = (norms[rows][:, None] + norms[safe]
+         - 2.0 * jnp.einsum("bkd,bd->bk", vecs, q))
+    return (jnp.where(valid, init_chunk, -1),
+            jnp.where(valid, jnp.maximum(d, 0.0), jnp.inf),
+            jnp.sum(valid, dtype=jnp.int32))
+
+
+def _seed_from_init(data, norms, ids, dists, fresh, init_ids, block,
+                    backend):
+    """Fold a caller-supplied (N, I) id table into the empty table.
+
+    Distances are (re)computed in *this* data's space — the init table may
+    come from another metric space entirely (the antihub-subset reuse path
+    feeds raw-space neighbors into the PCA-projected build) — and each
+    valid non-self entry counts as one distance evaluation. The gather +
+    distance pass runs in ``block``-row chunks like every other distance
+    pass in the build stack, so the (N, I, D) gathered tensor never
+    materializes at once.
+    """
+    n = data.shape[0]
+    ci_parts, cd_parts, counts = [], [], []
+    for s in range(0, n, block):
+        e = min(s + block, n)
+        ci, cd, c = _seed_dists_chunk(
+            data, norms, jnp.arange(s, e, dtype=jnp.int32), init_ids[s:e])
+        ci_parts.append(ci)
+        cd_parts.append(cd)
+        counts.append(c)
+    out = _fold_merge(ids, dists, fresh, jnp.concatenate(ci_parts),
+                      jnp.concatenate(cd_parts), block, backend)
+    return out + (_host_sum(jnp.stack(counts)),)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("s_fwd", "s_rev", "u_slots", "block", "backend"))
 def _round(key, data, norms, ids, dists, fresh, s_fwd, s_rev, u_slots,
-           block):
+           block, backend):
     """One sample -> local-join -> update round. Returns new state + #changed."""
     n, k = ids.shape
     kf, ko, kr, kh = jax.random.split(key, 4)
@@ -276,7 +303,8 @@ def _round(key, data, norms, ids, dists, fresh, s_fwd, s_rev, u_slots,
     # -- fold direct + proposal candidates into the table (no new dists) ---
     cat_i = jnp.concatenate([dir_i, buf_v], axis=1)
     cat_d = jnp.concatenate([dir_d, buf_d], axis=1)
-    out_i, out_d, out_f = _fold_merge(ids, dists, fresh, cat_i, cat_d, block)
+    out_i, out_d, out_f = _fold_merge(ids, dists, fresh, cat_i, cat_d, block,
+                                      backend)
     changed = jnp.sum((out_i != ids) & (out_i >= 0))
     return out_i, out_d, out_f, changed, n_eval
 
@@ -286,6 +314,8 @@ def nn_descent(data: jax.Array, k: int, *, key: Optional[jax.Array] = None,
                s_rev: Optional[int] = None, u_slots: Optional[int] = None,
                k_build: Optional[int] = None, init_passes: int = 4,
                init_bsize: int = 32, block: int = 2048,
+               init_ids: Optional[jax.Array] = None,
+               merge_backend: Optional[str] = None,
                with_stats: bool = False):
     """Approximate (N, k) kNN graph; same contract as ``knn_graph``.
 
@@ -296,8 +326,19 @@ def nn_descent(data: jax.Array, k: int, *, key: Optional[jax.Array] = None,
     ``k_build`` is the internal table width: NN-Descent converges to local
     optima when the table is narrow (the classic small-K failure mode), so
     small requested k runs with a wider table that is truncated on return.
+
+    ``init_ids`` (N, I) seeds the table from a caller-supplied neighbor
+    id table (-1 padded; distances recomputed here, one eval per valid
+    entry). This is the "filter + patch" reuse path: a kNN table built on
+    a superset (or in another projection of) this data warm-starts the
+    refinement, so a couple of ``rounds`` replace a from-scratch build.
+
+    ``merge_backend`` picks the dedup-top-k merge primitive
+    (``kernels/topk_merge``): None = bitonic Pallas kernel on TPU, the
+    stable-argsort jnp path elsewhere.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
+    merge_backend = resolve_merge_backend(merge_backend)
     n = data.shape[0]
     k_build = k_build if k_build is not None else max(k, min(2 * k, 20))
     kk = min(max(k_build, k), n - 1) if n > 1 else 1
@@ -318,11 +359,17 @@ def nn_descent(data: jax.Array, k: int, *, key: Optional[jax.Array] = None,
     dists = jnp.full((n, kk), jnp.inf, jnp.float32)
     fresh = jnp.zeros((n, kk), bool)
     evals = 0
+    if init_ids is not None:
+        ids, dists, fresh, n_eval = _seed_from_init(
+            data, norms, ids, dists, fresh,
+            jnp.asarray(init_ids, jnp.int32), block, merge_backend)
+        evals += _host_sum(n_eval)
     bsize = min(init_bsize, n)
     for _ in range(init_passes):
         key, sub = jax.random.split(key)
         ids, dists, fresh, n_eval = _rp_block_join(
-            sub, data, norms, ids, dists, fresh, bsize, block)
+            sub, data, norms, ids, dists, fresh, bsize, block,
+            merge_backend)
         evals += _host_sum(n_eval) + n    # tile evals + the projection pass
     rate = 1.0
     r = 0
@@ -330,7 +377,7 @@ def nn_descent(data: jax.Array, k: int, *, key: Optional[jax.Array] = None,
         key, sub = jax.random.split(key)
         ids, dists, fresh, changed, n_eval = _round(
             sub, data, norms, ids, dists, fresh, s_fwd, s_rev, u_slots,
-            block)
+            block, merge_backend)
         evals += _host_sum(n_eval)
         rate = float(changed) / float(n * kk)
         if rate <= delta:

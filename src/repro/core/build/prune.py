@@ -134,6 +134,56 @@ def reprune(data: jax.Array, neighbors: jax.Array, *, alpha: float = 1.0,
                            alpha)
 
 
+def reprune_family(data: jax.Array, neighbors: jax.Array, alphas,
+                   chunk: int = 2048) -> jax.Array:
+    """The whole Pareto-relevant (alpha, degree) grid in ONE vmapped pass.
+
+    Every alpha shares the same distance-ascending candidate pool (the
+    sorted max-degree adjacency — computed once), so the A-point alpha
+    grid is a ``vmap`` of the occlusion scan over the alpha axis; and a
+    smaller ``degree`` is a *prefix* of the max-degree scan (the greedy
+    rule only ever tests a candidate against earlier-kept ones), so no
+    degree axis is materialized at all. Returns an (A, N, R_max) stack:
+
+        stack[i, :, :d]  ==  reprune(data, neighbors, alpha=alphas[i],
+                                     degree=d)          # bit-identical
+
+    making every (alpha, degree) trial a lookup + slice.
+    """
+    n, rmax = neighbors.shape
+    cand_i, cand_d = sorted_adjacency(data, neighbors, chunk)
+    node_ids = jnp.arange(n, dtype=jnp.int32)
+    al = jnp.asarray(alphas, jnp.float32)
+    outs = []
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        outs.append(jax.vmap(
+            lambda a, s=s, e=e: alpha_prune(
+                data, node_ids[s:e], cand_i[s:e], cand_d[s:e], rmax,
+                a))(al))
+    return jnp.concatenate(outs, axis=1)
+
+
+def nsg_from_neighbors(data: jax.Array, neighbors: jax.Array, medoid, *,
+                       knn_ids: Optional[jax.Array] = None):
+    """Pruned adjacency -> servable ``NSGGraph`` (connectivity repair).
+
+    The shared tail of every rebuild-free derivation path: ``reprune_nsg``
+    and the tuner's ``reprune_family`` lookups both end here. ``knn_ids``
+    supplies repair parents (the build-time kNN table if the caller kept
+    it; defaults to the adjacency itself).
+    """
+    import numpy as np
+
+    from repro.core.nsg import NSGGraph, _ensure_connected
+
+    parents = knn_ids if knn_ids is not None else neighbors
+    nbrs = _ensure_connected(np.array(neighbors), np.asarray(data),
+                             int(medoid), np.asarray(parents))
+    return NSGGraph(neighbors=jnp.asarray(nbrs), medoid=jnp.asarray(
+        medoid, jnp.int32))
+
+
 def reprune_nsg(data: jax.Array, graph, *, alpha: float = 1.0,
                 degree: Optional[int] = None,
                 knn_ids: Optional[jax.Array] = None, chunk: int = 2048):
@@ -142,13 +192,6 @@ def reprune_nsg(data: jax.Array, graph, *, alpha: float = 1.0,
     ``knn_ids`` supplies repair parents (the build-time kNN table if the
     caller kept it; defaults to the cached adjacency itself).
     """
-    import numpy as np
-
-    from repro.core.nsg import NSGGraph, _ensure_connected
-
     nbrs = reprune(data, graph.neighbors, alpha=alpha, degree=degree,
                    chunk=chunk)
-    parents = knn_ids if knn_ids is not None else graph.neighbors
-    nbrs = _ensure_connected(np.array(nbrs), np.asarray(data),
-                             int(graph.medoid), np.asarray(parents))
-    return NSGGraph(neighbors=jnp.asarray(nbrs), medoid=graph.medoid)
+    return nsg_from_neighbors(data, nbrs, graph.medoid, knn_ids=knn_ids)

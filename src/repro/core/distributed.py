@@ -17,8 +17,9 @@ constructor override (forwarded to every per-shard ``build_index`` call).
 """
 from __future__ import annotations
 
+import copy
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dc_replace
 from typing import Optional, Tuple
 
 import jax
@@ -30,7 +31,7 @@ from repro.core.beam_search import beam_search
 from repro.core.distances import l2_topk
 from repro.core.index_api import build_index
 from repro.core.pipeline import IndexParams, TunedGraphIndex
-from repro.distributed.sharding import shard_map
+from repro.distributed.sharding import put_row_sharded, shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +158,11 @@ class ShardedIndex:
         self.mesh = mesh
         self.arrays: Optional[ShardedIndexArrays] = None
         self._step = None
+        # retained per-shard indexes: each holds its cached max-degree
+        # graph, the substrate for rebuild-free (alpha, degree) reprune
+        self.subs: list = []
+        self._m = 0                       # per-shard padded row count
+        self.n_structural_builds = 0      # per-shard fits ever run here
 
     @property
     def n_shards(self) -> int:
@@ -173,7 +179,10 @@ class ShardedIndex:
             sub = TunedGraphIndex(p).fit(data[bounds[i]:bounds[i + 1]],
                                          jax.random.fold_in(key, i))
             subs.append(sub)
+        self.subs = subs
+        self.n_structural_builds += s
         m = max(sub.ntotal for sub in subs)
+        self._m = m
         dim = subs[0].base.shape[1]
         c = p.ep_clusters
         base = np.zeros((s * m, dim), np.float32)
@@ -206,32 +215,67 @@ class ShardedIndex:
             comp = np.eye(d0, dim, dtype=np.float32)
 
         from repro import flags
-        shard = functools.partial(NamedSharding, self.mesh)
-        rows = P("model")
         base_dt = jnp.bfloat16 if flags.ANN_BF16_BASE else jnp.float32
         self.arrays = ShardedIndexArrays(
-            base=jax.device_put(jnp.asarray(base, dtype=base_dt),
-                                shard(P("model", None))),
-            neighbors=jax.device_put(nbrs, shard(P("model", None))),
-            global_ids=jax.device_put(gids, shard(rows)),
-            centroids=jax.device_put(cents, shard(P("model", None))),
-            members=jax.device_put(members, shard(rows)),
+            base=put_row_sharded(self.mesh,
+                                 jnp.asarray(base, dtype=base_dt), None),
+            neighbors=put_row_sharded(self.mesh, nbrs, None),
+            global_ids=put_row_sharded(self.mesh, gids),
+            centroids=put_row_sharded(self.mesh, cents, None),
+            members=put_row_sharded(self.mesh, members),
             pca_mean=jax.device_put(mean.astype(np.float32)),
             pca_comp=jax.device_put(comp.astype(np.float32)),
-            base_norms=jax.device_put(
-                (base.astype(np.float32) ** 2).sum(-1),
-                shard(P("model"))),
+            base_norms=put_row_sharded(
+                self.mesh, (base.astype(np.float32) ** 2).sum(-1)),
         )
         return self
+
+    # -- rebuild-free derivation ("prune, don't rebuild", sharded) --------
+    def reprune(self, *, alpha: float = 1.0,
+                degree: Optional[int] = None) -> "ShardedIndex":
+        """Derive an (alpha, degree) variant with NO per-shard rebuild.
+
+        Each retained shard repruned its cached max-degree graph
+        (``TunedGraphIndex.reprune`` — O(rows * R) + repair); only the
+        neighbors table is re-placed on the mesh, every other device
+        array (base vectors, ids, centroids, norms, PCA) is shared with
+        the parent. ``n_structural_builds`` is inherited unchanged — the
+        no-rebuild property tests assert on it.
+        """
+        assert self.subs, "fit() first (subs are retained for reprune)"
+        d_subs = [sub.reprune(alpha=alpha, degree=degree)
+                  for sub in self.subs]
+        m = self._m
+        r_out = max(s.graph.neighbors.shape[1] for s in d_subs)
+        nbrs = np.full((self.n_shards * m, r_out), -1, np.int32)
+        for i, sub in enumerate(d_subs):
+            nbrs[i * m: i * m + sub.ntotal] = np.asarray(
+                sub.graph.neighbors)
+        out = copy.copy(self)
+        # out.subs stays the STRUCTURAL (max-degree) subs — shared with
+        # the parent — so chaining reprune on a derived index re-derives
+        # from the cached maximum instead of double-pruning a degraded
+        # graph (degree can go back UP on a derived index).
+        out.params = dc_replace(self.params, alpha=alpha,
+                                graph_degree=r_out)
+        out.arrays = dc_replace(
+            self.arrays,
+            neighbors=put_row_sharded(self.mesh, nbrs, None))
+        return out
 
     def search(self, queries: jax.Array, k: int, params=None, *,
                ef: Optional[int] = None, mode: Optional[str] = None):
         if params is not None:
             ef = ef if ef is not None else params.ef_search
             mode = mode if mode is not None else params.mode
-        step = make_search_step(self.mesh, ef=ef or self.params.ef_search,
-                                k=k, mode=mode or "while")
-        return step(queries, self.arrays)
+        skey = (ef or self.params.ef_search, k, mode or "while")
+        # cache the jitted step per (ef, k, mode): rebuilding it per call
+        # would hand every QPS measurement a cold trace cache (the step
+        # closes over no arrays, so derived reprune clones share it)
+        if self._step is None or self._step[0] != skey:
+            self._step = (skey, make_search_step(
+                self.mesh, ef=skey[0], k=k, mode=skey[2]))
+        return self._step[1](queries, self.arrays)
 
     @property
     def ntotal(self) -> int:
@@ -279,9 +323,14 @@ class ShardedFactoryIndex:
         self.n_shards = n_shards
         self.knn_backend = knn_backend   # per-shard build override
         self.subs: list = []
+        # the max-degree shards fit() built: reprune always derives from
+        # these (NOT from self.subs, which on a derived index are already
+        # pruned), so chained reprunes never compound
+        self._structural_subs: list = []
         self.offsets: Optional[np.ndarray] = None
         self.pca = None
         self.input_dim: int = 0
+        self.n_structural_builds = 0     # per-shard fits ever run here
 
     def fit(self, data: jax.Array, *, key: Optional[jax.Array] = None):
         from repro.core.index_api import split_pca_prefix
@@ -301,7 +350,29 @@ class ShardedFactoryIndex:
                         knn_backend=self.knn_backend)
             for i in range(self.n_shards)
         ]
+        self._structural_subs = self.subs
+        self.n_structural_builds += self.n_shards
         return self
+
+    def reprune(self, *, alpha: float = 1.0,
+                degree: Optional[int] = None) -> "ShardedFactoryIndex":
+        """Per-shard rebuild-free (alpha, degree) derivation.
+
+        Works for any spec whose family supports ``reprune`` (the NSG
+        pipeline); shards share their base vectors with the parent, only
+        the serving graphs are derived. Raises TypeError for families
+        without a cached max-degree graph.
+        """
+        if not self._structural_subs:
+            raise RuntimeError("fit() first")
+        if not all(hasattr(s, "reprune") for s in self._structural_subs):
+            raise TypeError(
+                f"spec {self.spec!r} shards do not support reprune "
+                "(graph-family specs only)")
+        out = copy.copy(self)
+        out.subs = [s.reprune(alpha=alpha, degree=degree)
+                    for s in self._structural_subs]
+        return out
 
     def search(self, queries: jax.Array, k: int, params=None):
         if self.pca is not None:

@@ -2,8 +2,17 @@
 
 Build phases:
   1. medoid (navigating node) — one distance pass;
-  2. per-node candidate pools — beam search *on the kNN graph* toward each
-     node, union its kNN list (all batched/vmapped, chunked over nodes);
+  2. per-node candidate pools, two backends (``pools_backend``):
+     * ``"search"`` — beam search *on the kNN graph* toward each node,
+       union its kNN list (all batched/vmapped, chunked over nodes) — the
+       classic NSG recipe, O(hops * K) distance evals per node: the build
+       wall-clock ceiling at large N;
+     * ``"nndescent"`` — pools derived from the kNN *table* itself
+       (forward ∪ reverse ∪ 1-hop expansion, ``core/build/pools.py``),
+       O(K * fanout) evals per node. The default whenever the table's
+       distances are available (i.e. the kNN backend was NN-Descent or
+       handed its dists through); the beam-search pools remain as the
+       fallback and as the parity baseline.
   3. MRNG occlusion pruning — the sequential heap walk becomes a fixed-length
      masked fori_loop vmapped over nodes (O(L * R) distance checks per node,
      all MXU matmuls);
@@ -14,6 +23,10 @@ Build phases:
 
 Phases 1-4 dominate (>99% of distance work) and run on device; phase 5 is
 graph surgery, O(N * R) pointer work, inherently host-side.
+``build_nsg(with_stats=True)`` returns an ``NSGBuildStats`` whose
+``pool_evals`` counts phase 2's database-distance evaluations exactly —
+the quantity the pools backends compete on (occlusion-test distances in
+phases 3-4 are identical across backends and tracked separately).
 
 The pruning primitive itself lives in ``core/build/prune.py`` as the α-RNG
 rule (``alpha_prune``); ``mrng_prune`` below is its alpha=1 specialization,
@@ -23,23 +36,48 @@ variants from a built graph with no rebuild.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.beam_search import beam_search
+from repro.core.build.pools import nnd_candidate_pools
 from repro.core.build.prune import (
     alpha_prune, mark_dups as _mark_dups, pairwise_rows_sqdist,
     prune_in_chunks,
 )
 from repro.core.distances import nearest, pairwise_sqdist
+from repro.kernels.topk_merge import topk_pool
 
 
 class NSGGraph(NamedTuple):
     neighbors: jax.Array   # (N, R) int32, -1 padded
     medoid: jax.Array      # () int32
+
+
+class NSGBuildStats(NamedTuple):
+    """Work accounting for one NSG build."""
+    pools_backend: str     # "search" | "nndescent" (resolved)
+    n: int
+    degree: int
+    pool_evals: int        # phase-2 database-distance evaluations
+    prune_evals: int       # phases 3-4 (identical across pools backends)
+
+
+POOLS_BACKENDS = ("search", "nndescent", "auto")
+
+
+def resolve_pools_backend(backend: str, knn_dists) -> str:
+    """Resolve ``"auto"``: table-derived pools whenever dists are in hand."""
+    if backend not in POOLS_BACKENDS:
+        raise ValueError(
+            f"unknown pools backend {backend!r}; expected one of "
+            f"{POOLS_BACKENDS}")
+    if backend == "auto":
+        return "nndescent" if knn_dists is not None else "search"
+    return backend
 
 
 def mrng_prune(data: jax.Array, node_ids: jax.Array, cand_ids: jax.Array,
@@ -55,32 +93,32 @@ def mrng_prune(data: jax.Array, node_ids: jax.Array, cand_ids: jax.Array,
 
 def _candidate_pools(data, knn_ids, medoid, n_candidates, chunk):
     """Per-node candidate pools: beam-search the kNN graph toward each node,
-    then union the node's own kNN list. Returns (N, L) ids + dists sorted."""
+    then union the node's own kNN list. Returns (N, L) ids + dists sorted
+    plus the distance-evaluation count (hops * K expansions + the entry
+    distance + the own-list pass, per node)."""
     n, k = knn_ids.shape
     ef = n_candidates
-    pools_i, pools_d = [], []
+    pools_i, pools_d, hops_parts = [], [], []
     for s in range(0, n, chunk):
         e = min(s + chunk, n)
         q = data[s:e]
         entry = jnp.full((e - s,), medoid, jnp.int32)
-        d_pool, i_pool, _ = beam_search(
+        d_pool, i_pool, hops = beam_search(
             q, data, knn_ids, entry, ef=ef, k=ef, max_iters=2 * ef,
             mode="while")
         own = knn_ids[s:e]                                     # (b, k)
         own_d = pairwise_rows_sqdist(q, data, own)
+        hops_parts.append(hops)        # summed host-side AFTER the loop:
+        # an int() here would sync per chunk and serialize the dispatch
         ids = jnp.concatenate([i_pool, own], axis=1)
         ds = jnp.concatenate([d_pool, own_d], axis=1)
-        # dedup: first occurrence wins after sort
-        order = jnp.argsort(ds, axis=1)
-        ids = jnp.take_along_axis(ids, order, axis=1)
-        ds = jnp.take_along_axis(ds, order, axis=1)
-        dup = _mark_dups(ids)
-        ids = jnp.where(dup, -1, ids)
-        ds = jnp.where(dup, jnp.inf, ds)
-        order = jnp.argsort(ds, axis=1)[:, :ef]
-        pools_i.append(jnp.take_along_axis(ids, order, axis=1))
-        pools_d.append(jnp.take_along_axis(ds, order, axis=1))
-    return jnp.concatenate(pools_i), jnp.concatenate(pools_d)
+        # dedup: first occurrence (the nearest copy) wins
+        ids, ds = topk_pool(ids, ds, ef)
+        pools_i.append(ids)
+        pools_d.append(ds)
+    evals = sum(int(np.sum(np.asarray(h), dtype=np.int64)) * k
+                for h in hops_parts) + n * (k + 1)
+    return jnp.concatenate(pools_i), jnp.concatenate(pools_d), evals
 
 
 # ---------------------------------------------------------------------------
@@ -90,14 +128,37 @@ def _candidate_pools(data, knn_ids, medoid, n_candidates, chunk):
 
 def build_nsg(data: jax.Array, knn_ids: jax.Array, *, degree: int,
               n_candidates: int = 64, chunk: int = 2048,
-              alpha: float = 1.0) -> NSGGraph:
+              alpha: float = 1.0, pools_backend: str = "auto",
+              knn_dists: Optional[jax.Array] = None,
+              with_stats: bool = False):
+    """Build an NSG over ``data`` from its kNN graph.
+
+    ``pools_backend`` picks phase 2: ``"search"`` (beam-search pools, the
+    classic recipe), ``"nndescent"`` (table-derived pools — requires or
+    recomputes ``knn_dists``), or ``"auto"`` (table-derived whenever
+    ``knn_dists`` is provided). Returns the ``NSGGraph`` — plus an
+    ``NSGBuildStats`` when ``with_stats`` is set.
+    """
     n = data.shape[0]
+    resolved = resolve_pools_backend(pools_backend, knn_dists)
     mean = jnp.mean(data.astype(jnp.float32), axis=0, keepdims=True)
     _, medoid = nearest(mean, data)
     medoid = medoid[0].astype(jnp.int32)
 
-    cand_i, cand_d = _candidate_pools(data, knn_ids, medoid,
-                                      n_candidates, chunk)
+    if resolved == "nndescent":
+        if knn_dists is None:
+            # explicit request without table dists: one O(N*K) gather pass
+            knn_dists = _dists_in_chunks(
+                data, jnp.arange(n, dtype=jnp.int32), knn_ids, chunk)
+            pool_evals = int(n) * int(knn_ids.shape[1])
+        else:
+            pool_evals = 0
+        cand_i, cand_d, ev = nnd_candidate_pools(
+            data, knn_ids, knn_dists, n_candidates, chunk=chunk)
+        pool_evals += ev
+    else:
+        cand_i, cand_d, pool_evals = _candidate_pools(
+            data, knn_ids, medoid, n_candidates, chunk)
     node_ids = jnp.arange(n, dtype=jnp.int32)
     nbrs = prune_in_chunks(data, node_ids, cand_i, cand_d, degree, chunk,
                            alpha)
@@ -131,7 +192,17 @@ def build_nsg(data: jax.Array, knn_ids: jax.Array, *, degree: int,
 
     nbrs = _ensure_connected(np.array(nbrs), np.asarray(data),
                              int(medoid), np.asarray(knn_ids))
-    return NSGGraph(neighbors=jnp.asarray(nbrs), medoid=medoid)
+    graph = NSGGraph(neighbors=jnp.asarray(nbrs), medoid=medoid)
+    if with_stats:
+        # fixed-shape occlusion + interconnect work, identical across
+        # pools backends: phase-3 scan (L * R per node), the union
+        # distance pass (3R per node), the phase-4 re-prune (3R * R)
+        prune_evals = n * (cand_i.shape[1] * degree + 3 * degree
+                           + 3 * degree * degree)
+        return graph, NSGBuildStats(
+            pools_backend=resolved, n=n, degree=degree,
+            pool_evals=int(pool_evals), prune_evals=int(prune_evals))
+    return graph
 
 
 def _dists_in_chunks(data, node_ids, ids, chunk):

@@ -17,10 +17,27 @@ import jax.numpy as jnp
 from repro.configs.base import ANNConfig
 from repro.core import antihub as antihub_mod
 from repro.core.beam_search import beam_search
-from repro.core.build import build_knn, reprune_nsg
+from repro.core.build import build_knn, reprune_nsg, resolve_backend
+from repro.core.build.nn_descent import nn_descent
 from repro.core.entry_points import EntryPointSelector, fit_entry_points
 from repro.core.nsg import NSGGraph, build_nsg
 from repro.core.pca import PCA, fit_pca
+
+# Module-level structural-build counter: every TunedGraphIndex.fit (a real
+# graph build: pools + prune + interconnect) increments it. Rebuild-free
+# derivations (reprune, with_graph, the tuner's grid lookups, sharded
+# reprune) do NOT — tests assert sweeps leave it untouched.
+_N_STRUCTURAL_BUILDS = 0
+
+# NN-Descent refinement rounds for the antihub-subset reuse path: the
+# filtered full-data table is already a good approximation, so a couple of
+# patch rounds replace a from-scratch build (init passes + ~10 rounds).
+SUBSET_PATCH_ROUNDS = 3
+
+
+def structural_build_count() -> int:
+    """Process-wide count of real (non-derived) NSG pipeline builds."""
+    return _N_STRUCTURAL_BUILDS
 
 
 @dataclass(frozen=True)
@@ -39,6 +56,13 @@ class IndexParams:
     # kNN-graph build backend: "exact" | "nndescent" | "auto" (see
     # core/build). Auto switches to NN-Descent at large N.
     knn_backend: str = "auto"
+    # NSG candidate-pool backend (core/nsg): "search" beam-searches the
+    # kNN graph toward every node (the classic recipe), "nndescent"
+    # derives pools from the kNN table (forward ∪ reverse ∪ 1-hop — no
+    # beam searches). "auto" = table-derived pools unless knn_backend is
+    # explicitly "exact" (the table's distances are in hand either way;
+    # only an explicit exact request keeps the classic beam pools).
+    pools_backend: str = "auto"
 
     @staticmethod
     def from_config(cfg: ANNConfig) -> "IndexParams":
@@ -48,7 +72,8 @@ class IndexParams:
             graph_degree=cfg.graph_degree, build_knn_k=cfg.build_knn_k,
             build_candidates=cfg.build_candidates,
             alpha=getattr(cfg, "prune_alpha", 1.0),
-            knn_backend=getattr(cfg, "knn_backend", "auto"))
+            knn_backend=getattr(cfg, "knn_backend", "auto"),
+            pools_backend=getattr(cfg, "pools_backend", "auto"))
 
 
 class TunedGraphIndex:
@@ -75,16 +100,20 @@ class TunedGraphIndex:
         computes them once and threads them through every trial instead of
         paying an O(N^2) pass per structural build).
         """
+        global _N_STRUCTURAL_BUILDS
         t0 = time.perf_counter()
         key = key if key is not None else jax.random.PRNGKey(0)
         p = self.params
         n, d0 = data.shape
         self.input_dim = d0
 
+        ah_ids = antihub_knn_ids
         if p.antihub_keep < 1.0:
+            if ah_ids is None:
+                _, ah_ids = build_knn(data, 10, backend=p.knn_backend,
+                                      key=jax.random.fold_in(key, 17))
             self.kept_idx = antihub_mod.antihub_keep_indices(
-                data, p.antihub_keep, k=10, knn_ids=antihub_knn_ids,
-                backend=p.knn_backend, key=jax.random.fold_in(key, 17))
+                data, p.antihub_keep, k=10, knn_ids=ah_ids)
             sub = data[self.kept_idx]
         else:
             self.kept_idx = jnp.arange(n, dtype=jnp.int32)
@@ -98,14 +127,43 @@ class TunedGraphIndex:
             base = sub
         self.base = base
 
-        _, knn_ids = build_knn(base, p.build_knn_k, backend=p.knn_backend,
-                               key=jax.random.fold_in(key, 23))
+        resolved_knn = resolve_backend(p.knn_backend, base.shape[0])
+        if (resolved_knn == "nndescent" and ah_ids is not None
+                and p.antihub_keep < 1.0):
+            # antihub reuse: the raw database's kNN table already exists
+            # (the k-occurrence pass built it) — filter it to the kept
+            # subset, remap ids, and let a few NN-Descent patch rounds
+            # repair the filtering (dropped neighbors) and the projection
+            # (distances re-evaluated in base space) instead of paying a
+            # from-scratch subset build.
+            remap = jnp.full((n,), -1, jnp.int32
+                             ).at[self.kept_idx].set(
+                jnp.arange(self.kept_idx.shape[0], dtype=jnp.int32))
+            kept_tab = ah_ids[self.kept_idx]
+            init = jnp.where(kept_tab >= 0,
+                             remap[jnp.maximum(kept_tab, 0)], -1)
+            knn_dists, knn_ids = nn_descent(
+                base, p.build_knn_k, key=jax.random.fold_in(key, 23),
+                init_ids=init, init_passes=1,
+                rounds=SUBSET_PATCH_ROUNDS)
+        else:
+            knn_dists, knn_ids = build_knn(
+                base, p.build_knn_k, backend=p.knn_backend,
+                key=jax.random.fold_in(key, 23))
         self.knn_ids = knn_ids
+
+        pools = p.pools_backend
+        if pools == "auto":
+            # table-derived pools whenever the kNN side is (or may be)
+            # NN-Descent; explicit exact keeps the classic beam pools
+            pools = "search" if p.knn_backend == "exact" else "nndescent"
         self.graph = build_nsg(base, knn_ids, degree=p.graph_degree,
                                n_candidates=p.build_candidates,
-                               alpha=p.alpha)
+                               alpha=p.alpha, pools_backend=pools,
+                               knn_dists=knn_dists)
         self.eps = fit_entry_points(key, base, p.ep_clusters)
         self.build_seconds = time.perf_counter() - t0
+        _N_STRUCTURAL_BUILDS += 1
         return self
 
     # -- rebuild-free derivation ("prune, don't rebuild") ------------------

@@ -1,5 +1,6 @@
 from repro.core.tuning.objective import (  # noqa: F401
-    AnnObjective, SearchParamsObjective, default_space,
+    AnnObjective, SearchParamsObjective, ShardedRepruneObjective,
+    default_space,
 )
 from repro.core.tuning.samplers import RandomSampler, TPESampler  # noqa: F401
 from repro.core.tuning.space import (  # noqa: F401

@@ -5,10 +5,16 @@ Beyond-paper improvement (their §5.3 limitation — "we have to rebuild the
 index every time D and alpha change"): builds are cached by the *structural*
 sub-key (pca_dim, antihub_keep, kNN/candidate build params), and the cached
 build is made ONCE at the structural maximum (base graph_degree, pruning
-alpha=1 — the densest member of the α-reachable family). Trials that move:
+alpha=1 — the densest member of the α-reachable family). At that moment the
+whole Pareto-relevant (alpha, degree) *reprune grid* is precomputed in one
+vmapped pass over the shared sorted max-degree adjacency
+(``build.prune.reprune_family`` — alphas vmapped, degrees are prefixes), so
+trials that move:
 
-  * ``graph_degree`` / ``alpha``  — derive their graph from the cached one
-    via ``reprune`` (O(N*R), no candidate pools, no rebuild);
+  * ``graph_degree`` / ``alpha``  — snap alpha to the grid and *look up*
+    their adjacency (a slice of the family stack + connectivity repair —
+    no prune pass, no candidate pools, no rebuild; ``grid_hits`` counts
+    these lookups);
   * ``ep_clusters``               — re-fit entry points on the cached base
     (additionally cached per (structure, k));
   * ``ef_search``                 — re-run search only.
@@ -32,6 +38,18 @@ from repro.core.index_api import Index, SearchParams, build_index
 from repro.core.pipeline import IndexParams, TunedGraphIndex
 from repro.core.tuning.space import Float, Int, SearchSpace
 from repro.core.tuning.study import Trial
+
+
+# The precomputed pruning-alpha grid shared by the rebuild-free
+# objectives: 0.05 pitch over default_space's [1.0, 1.4] range — finer
+# than the knob's recall effect resolves. Sampled alphas snap to it.
+DEFAULT_ALPHA_GRID = tuple(round(1.0 + 0.05 * i, 2) for i in range(9))
+
+
+def snap_alpha(grid: Tuple[float, ...], alpha: float) -> Tuple[int, float]:
+    """Nearest grid point (index, value) for a sampled pruning alpha."""
+    i = int(np.argmin([abs(a - alpha) for a in grid]))
+    return i, grid[i]
 
 
 def default_space(dim: int, n: int, max_degree: int = 32) -> SearchSpace:
@@ -74,7 +92,8 @@ class AnnObjective:
     def __init__(self, data, queries, k: int = 10,
                  base_params: Optional[IndexParams] = None,
                  recall_floor: float = 0.9, qps_repeats: int = 5,
-                 mem_limit_bytes: Optional[int] = None, seed: int = 0):
+                 mem_limit_bytes: Optional[int] = None, seed: int = 0,
+                 alpha_grid: Optional[Tuple[float, ...]] = None):
         self.data = data
         self.queries = queries
         self.k = k
@@ -84,12 +103,17 @@ class AnnObjective:
         self.key = jax.random.PRNGKey(seed)
         self.base = base_params or IndexParams(pca_dim=data.shape[1])
         self.max_degree = self.base.graph_degree
+        self.alpha_grid = tuple(sorted(
+            alpha_grid if alpha_grid is not None else DEFAULT_ALPHA_GRID))
         _, self.true_i = FlatIndex(data).search(queries, k)
         self._build_cache: Dict[tuple, TunedGraphIndex] = {}
+        self._family_cache: Dict[tuple, object] = {}   # skey -> (A, N, R)
         self._graph_cache: Dict[tuple, object] = {}
         self._ep_cache: Dict[tuple, object] = {}
         self._antihub_ids = None
         self.eval_log: list = []
+        self.grid_hits = 0         # repruned trials served by a grid lookup
+        self.family_prunes = 0     # vmapped family passes (1 per structure)
 
     # -- internals ---------------------------------------------------------
     def _structural_key(self, p: IndexParams) -> tuple:
@@ -105,8 +129,13 @@ class AnnObjective:
                 key=jax.random.fold_in(self.key, 17))
         return self._antihub_ids
 
+    def _snap_alpha(self, alpha: float) -> Tuple[int, float]:
+        return snap_alpha(self.alpha_grid, alpha)
+
     def _get_index(self, p: IndexParams) -> Tuple[TunedGraphIndex, bool,
                                                   bool]:
+        from repro.core.build import nsg_from_neighbors, reprune_family
+
         skey = self._structural_key(p)
         if skey in self._build_cache:
             full = self._build_cache[skey]
@@ -119,19 +148,28 @@ class AnnObjective:
             full = TunedGraphIndex(structural).fit(
                 self.data, self.key, antihub_knn_ids=ah_ids)
             self._build_cache[skey] = full
+            # the whole (alpha, degree) family in one vmapped pass over
+            # the just-built max-degree graph: every degree/alpha trial
+            # on this structure is now a slice + connectivity repair
+            self._family_cache[skey] = reprune_family(
+                full.base, full.graph.neighbors, self.alpha_grid)
+            self.family_prunes += 1
             # the build already fit the ep_clusters=1 selector: seed the
             # cache so the first k=1 trial doesn't refit it
             self._ep_cache[skey + (1,)] = full.eps
             cached = False
 
         degree = min(p.graph_degree, self.max_degree)
-        alpha = float(p.alpha)
+        a_idx, alpha = self._snap_alpha(float(p.alpha))
         repruned = (degree != self.max_degree) or (alpha != 1.0)
         if repruned:
-            gkey = skey + (degree, round(alpha, 4))
+            gkey = skey + (degree, alpha)
             if gkey not in self._graph_cache:
-                self._graph_cache[gkey] = full.reprune(
-                    alpha=alpha, degree=degree).graph
+                fam = self._family_cache[skey]
+                self._graph_cache[gkey] = nsg_from_neighbors(
+                    full.base, fam[a_idx][:, :degree], full.graph.medoid,
+                    knn_ids=full.knn_ids)
+            self.grid_hits += 1
             idx = full.with_graph(self._graph_cache[gkey])
         else:
             idx = full.with_graph(full.graph)
@@ -155,6 +193,9 @@ class AnnObjective:
                 f"default_space to avoid sampling a dead range",
                 RuntimeWarning, stacklevel=2)
             params["graph_degree"] = self.max_degree
+        if "alpha" in params:
+            # keep the log honest: record the grid point actually served
+            params["alpha"] = self._snap_alpha(float(params["alpha"]))[1]
         p = replace(self.base, **params)
         t0 = time.perf_counter()
         idx, cached, repruned = self._get_index(p)
@@ -194,6 +235,107 @@ class AnnObjective:
             cons.append((r.mem_bytes - self.mem_limit) / self.mem_limit)
         trial.user_attrs["result"] = r
         return {"values": (r.qps, r.recall), "constraints": cons}
+
+
+class ShardedRepruneObjective:
+    """(graph_degree, alpha, ef_search) sweeps on a *sharded* index with
+    exactly one structural build per shard.
+
+    ``index`` is a fitted ``ShardedIndex`` / ``ShardedFactoryIndex`` (any
+    conformer exposing ``reprune(alpha=, degree=)``) built at the
+    structural maximum; every trial derives its serving graphs per shard
+    from the cached max-degree graphs — the "prune, don't rebuild"
+    property at cluster scale. Derived indexes are cached per snapped
+    (degree, alpha), so a sweep is one reprune per distinct grid point
+    and zero rebuilds (``grid_hits`` / the pipeline structural-build
+    counter make that assertable).
+    """
+
+    def __init__(self, index, data, queries, k: int = 10,
+                 recall_floor: float = 0.9, qps_repeats: int = 3,
+                 alpha_grid: Optional[Tuple[float, ...]] = None):
+        if not hasattr(index, "reprune"):
+            raise TypeError(
+                f"{type(index).__name__} has no reprune(); sharded "
+                "degree/alpha sweeps need a graph family (NSG specs)")
+        self.index = index
+        self.queries = queries
+        self.k = k
+        self.recall_floor = recall_floor
+        self.qps_repeats = qps_repeats
+        # the structural ceiling: the degree the shards were built at
+        # (ShardedIndex carries params itself; the factory wrapper's live
+        # on its per-shard sub-indexes)
+        p = getattr(index, "params", None)
+        if p is None and getattr(index, "subs", None):
+            p = getattr(index.subs[0], "params", None)
+        self.max_degree = p.graph_degree if p is not None else None
+        self.alpha_grid = tuple(sorted(
+            alpha_grid if alpha_grid is not None else DEFAULT_ALPHA_GRID))
+        _, self.true_i = FlatIndex(data).search(queries, k)
+        self._cache: Dict[tuple, object] = {}
+        self.grid_hits = 0
+        self.reprunes = 0
+        self.eval_log: list = []
+
+    @property
+    def space(self):
+        from repro.core.index_api import ef_search_space
+        from repro.core.tuning.space import Float, Int
+        md = self.max_degree or 32
+        return (ef_search_space()
+                .add("graph_degree", Int(max(4, md // 4), md))
+                .add("alpha", Float(self.alpha_grid[0],
+                                    self.alpha_grid[-1])))
+
+    def _derived(self, degree: int, alpha: float):
+        _, a = snap_alpha(self.alpha_grid, alpha)
+        if self.max_degree is not None:
+            degree = min(degree, self.max_degree)
+            if degree == self.max_degree and a == 1.0:
+                return self.index, a       # the cached structural maximum
+        key = (degree, a)
+        if key not in self._cache:
+            self._cache[key] = self.index.reprune(alpha=a, degree=degree)
+            self.reprunes += 1
+        else:
+            self.grid_hits += 1
+        return self._cache[key], a
+
+    def evaluate(self, params: Dict) -> EvalResult:
+        params = dict(params)
+        idx, a = self._derived(int(params.get("graph_degree",
+                                              self.max_degree or 32)),
+                               float(params.get("alpha", 1.0)))
+        params["alpha"] = a
+        sp = SearchParams(ef_search=max(
+            int(params.get("ef_search", 64)), self.k))
+        d, i = idx.search(self.queries, self.k, sp)         # warmup+compile
+        jax.block_until_ready(d)
+        times = []
+        for _ in range(self.qps_repeats):
+            t1 = time.perf_counter()
+            d, i = idx.search(self.queries, self.k, sp)
+            jax.block_until_ready(d)
+            times.append(time.perf_counter() - t1)
+        qps = self.queries.shape[0] / float(np.median(times))
+        mem = getattr(idx, "memory_bytes", None)
+        res = EvalResult(recall=recall_at_k(i, self.true_i), qps=qps,
+                         build_seconds=0.0, mem_bytes=mem() if mem else 0,
+                         cached_build=True, repruned=True)
+        self.eval_log.append((params, res))
+        return res
+
+    def single_objective(self, trial: Trial) -> dict:
+        r = self.evaluate(trial.params)
+        trial.user_attrs["result"] = r
+        return {"values": r.qps,
+                "constraints": [self.recall_floor - r.recall]}
+
+    def multi_objective(self, trial: Trial) -> dict:
+        r = self.evaluate(trial.params)
+        trial.user_attrs["result"] = r
+        return {"values": (r.qps, r.recall)}
 
 
 class SearchParamsObjective:

@@ -75,6 +75,15 @@ def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def put_row_sharded(mesh: Mesh, x, *trailing) -> jax.Array:
+    """``device_put`` with the leading dim on `model` — the ANN DB-row
+    convention. ``trailing`` extends the spec for higher-rank arrays
+    (usually ``None`` per extra dim). The one placement call behind both
+    the sharded-index fit AND its rebuild-free reprune path, so a derived
+    neighbors table always lands exactly where the original did."""
+    return jax.device_put(x, NamedSharding(mesh, P("model", *trailing)))
+
+
 def active_dp_axes() -> Optional[Tuple[str, ...]]:
     """DP axes of the ambient mesh (None when no mesh is active)."""
     if _ACTIVE_MESH is None:

@@ -1,0 +1,3 @@
+from repro.kernels.topk_merge.ops import (  # noqa: F401
+    resolve_merge_backend, topk_merge, topk_pool,
+)

@@ -1,0 +1,166 @@
+"""Bitonic top-k merge Pallas TPU kernel.
+
+NN-Descent's update step and NSG's candidate-pool assembly both reduce to
+the same primitive: given per-row candidate lists (ids, dists[, fresh]),
+drop duplicate ids, and keep the k best by distance. The jnp formulation
+(``ref.py``) spends three stable argsorts per row block — cheap on TPU's
+sort unit, dominant on a 1-core CPU host, and `lax.sort` does not lower
+inside Pallas TPU kernels at all. This kernel restates the primitive as a
+bitonic sorting network over VMEM-resident row blocks:
+
+  1. sort lanes by the lexicographic dedup key (id, fresh, dist) — padding
+     ids (< 0) map to an int32 sentinel so they sink to the tail;
+  2. mark lanes whose id equals their left neighbor's (a run of equal ids
+     is contiguous after the sort; the first element is the kept copy:
+     the old/table copy if one exists, else the nearest candidate);
+  3. re-sort by distance and emit the first k lanes.
+
+The compare-exchange partner ``i XOR j`` (j a power of two) is a
+reshape-flip — ``(B, M) -> (B, M/2j, 2, j)``, flip the length-2 axis —
+so the network needs no gathers, only reshapes, selects and iotas, all of
+which lower on TPU. Both sorts run the full O(M log^2 M) network,
+vectorized across the block's rows on the VPU; M (the padded candidate
+width) is small (tens to a few hundred), so the network cost is noise
+next to the MXU distance tiles that produced the candidates.
+
+Semantics match ``ref.py`` exactly except for ties the reference resolves
+by input position: candidates sharing (id, fresh) carry bit-equal
+distances in every caller (the same pair's distance is computed by the
+same arithmetic), so the tie-break never surfaces; distinct ids with
+bit-equal distances may swap final order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import tpu_compiler_params
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _xor_partner(x, j):
+    """Lanes i and i^j exchanged (j a power of two) via reshape + flip."""
+    b, m = x.shape
+    y = x.reshape(b, m // (2 * j), 2, j)
+    return jnp.flip(y, axis=2).reshape(b, m)
+
+
+def _bitonic_by(arrays, gt_fn, m):
+    """Bitonic-sort (B, m) lane tuples ascending by a strict comparator.
+
+    ``gt_fn(self_tuple, partner_tuple) -> bool (B, m)`` must be a strict
+    "self sorts after partner" predicate (False on equal keys: equal-key
+    lanes never swap, so payload fields not in the key ride along).
+    """
+    lane = jax.lax.broadcasted_iota(jnp.int32, arrays[0].shape, 1)
+    ksz = 2
+    while ksz <= m:
+        j = ksz // 2
+        while j >= 1:
+            partners = tuple(_xor_partner(a, j) for a in arrays)
+            gt_sp = gt_fn(arrays, partners)        # self > partner
+            gt_ps = _xor_partner(gt_sp, j)         # partner-side verdict
+            lo = (lane & j) == 0                   # lane is the pair's low i
+            asc = (lane & ksz) == 0                # ascending sub-sequence
+            take = jnp.where(lo == asc, gt_sp, gt_ps)
+            arrays = tuple(jnp.where(take, p, a)
+                           for a, p in zip(arrays, partners))
+            j //= 2
+        ksz *= 2
+    return arrays
+
+
+def _dedup_gt(self_t, part_t):
+    """Strict lexicographic (id, fresh, dist) with -1 ids as +inf."""
+    si, sd, sf = self_t
+    pi, pd, pf = part_t
+    si_k = jnp.where(si < 0, _I32_MAX, si)
+    pi_k = jnp.where(pi < 0, _I32_MAX, pi)
+    sf_i = sf.astype(jnp.int32)
+    pf_i = pf.astype(jnp.int32)
+    return ((si_k > pi_k)
+            | ((si_k == pi_k) & ((sf_i > pf_i)
+                                 | ((sf_i == pf_i) & (sd > pd)))))
+
+
+def _dist_gt(self_t, part_t):
+    return self_t[1] > part_t[1]
+
+
+def _topk_merge_kernel(ci_ref, cd_ref, cf_ref, oi_ref, od_ref, of_ref, *,
+                       k: int, m: int):
+    ids = ci_ref[...]
+    ds = cd_ref[...].astype(jnp.float32)
+    fresh = cf_ref[...]
+
+    ids, ds, fresh = _bitonic_by((ids, ds, fresh), _dedup_gt, m)
+    prev = jnp.concatenate(
+        [jnp.full((ids.shape[0], 1), -2, jnp.int32), ids[:, :-1]], axis=1)
+    dup = (ids == prev) | (ids < 0)
+    ds = jnp.where(dup, jnp.inf, ds)
+    ids, ds, fresh = _bitonic_by((ids, ds, fresh), _dist_gt, m)
+
+    out_i = jnp.where(jnp.isfinite(ds[:, :k]), ids[:, :k], -1)
+    oi_ref[...] = out_i
+    od_ref[...] = ds[:, :k]
+    of_ref[...] = fresh[:, :k] & (out_i >= 0)
+
+
+def _pow2_at_least(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_rows", "interpret"))
+def topk_merge_pallas(ids: jax.Array, dists: jax.Array, fresh: jax.Array,
+                      k: int, block_rows: int = 256,
+                      interpret: bool = True):
+    """(B, M) candidate rows -> dedup'd distance-top-k (ids, dists, fresh).
+
+    ``ids`` int32 (-1 = padding), ``dists`` f32, ``fresh`` bool. Rows are
+    independent; the grid tiles them in ``block_rows`` blocks. M is padded
+    to the next power of two internally. interpret=True on CPU (this
+    container); False compiles for TPU.
+    """
+    b, m_in = ids.shape
+    m = _pow2_at_least(max(m_in, max(k, 2)))
+    block_rows = min(block_rows, b)
+    gb = -(-b // block_rows)
+    padr = gb * block_rows - b
+    ids = jnp.pad(ids, ((0, padr), (0, m - m_in)), constant_values=-1)
+    dists = jnp.pad(dists.astype(jnp.float32), ((0, padr), (0, m - m_in)),
+                    constant_values=jnp.inf)
+    fresh = jnp.pad(fresh, ((0, padr), (0, m - m_in)),
+                    constant_values=False)
+
+    kernel = functools.partial(_topk_merge_kernel, k=k, m=m)
+    out_i, out_d, out_f = pl.pallas_call(
+        kernel,
+        grid=(gb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((gb * block_rows, k), jnp.int32),
+            jax.ShapeDtypeStruct((gb * block_rows, k), jnp.float32),
+            jax.ShapeDtypeStruct((gb * block_rows, k), jnp.bool_),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(ids, dists, fresh)
+    return out_i[:b], out_d[:b], out_f[:b]

@@ -8,6 +8,13 @@ paper's full pipeline: the space then comes from the index's own
 ``search_params_space()`` and the same Study drives it, whatever the family:
 
     PYTHONPATH=src python -m repro.launch.tune --spec "IVF128,Flat" --trials 10
+
+Add ``--shards`` to a graph-family spec to tune a *sharded* deployment's
+(graph_degree, alpha, ef_search): every shard builds once at the structural
+maximum and all degree/alpha trials are served by per-shard reprune —
+zero rebuilds, asserted by the structural-build counter in the log:
+
+    PYTHONPATH=src python -m repro.launch.tune --spec "NSG16" --shards 4
 """
 from __future__ import annotations
 
@@ -18,7 +25,8 @@ import jax
 
 from repro.core import FlatIndex, IndexParams
 from repro.core.tuning import (
-    AnnObjective, SearchParamsObjective, Study, TPESampler, default_space,
+    AnnObjective, SearchParamsObjective, ShardedRepruneObjective, Study,
+    TPESampler, default_space,
 )
 from repro.data import clustered_vectors, queries_like
 
@@ -36,6 +44,11 @@ def main():
     ap.add_argument("--spec", default=None,
                     help="factory spec: tune SearchParams for this index "
                          "instead of the pipeline's build knobs")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="with --spec on a graph family: shard the spec "
+                         "and sweep (graph_degree, alpha, ef_search) via "
+                         "per-shard reprune — one structural build per "
+                         "shard, everything else derived")
     ap.add_argument("--knn-backend", default="auto",
                     choices=["exact", "nndescent", "auto"],
                     help="build-time kNN-graph backend (core.build): exact "
@@ -49,7 +62,18 @@ def main():
     key = jax.random.PRNGKey(0)
     data = clustered_vectors(key, args.n, args.dim, n_clusters=32)
     queries = queries_like(jax.random.PRNGKey(1), data, args.queries)
-    if args.spec:
+    if args.spec and args.shards > 1:
+        from repro.core.distributed import ShardedFactoryIndex
+        from repro.core.pipeline import structural_build_count
+        b0 = structural_build_count()
+        idx = ShardedFactoryIndex(args.spec, n_shards=args.shards,
+                                  knn_backend=args.knn_backend).fit(
+            data, key=key)
+        obj = ShardedRepruneObjective(idx, data, queries, k=10,
+                                      recall_floor=args.recall_floor,
+                                      qps_repeats=3)
+        space = obj.space
+    elif args.spec:
         obj = SearchParamsObjective(args.spec, data, queries, k=10,
                                     recall_floor=args.recall_floor,
                                     qps_repeats=3, key=key)
@@ -99,6 +123,15 @@ def main():
     cached = len(obj.eval_log) - full - repr_
     print(f"{full} structural builds, {repr_} reprune derivations, "
           f"{cached} pure cache hits (the §5.3 rebuild cost fix)")
+    if hasattr(obj, "grid_hits"):
+        fam = getattr(obj, "family_prunes", getattr(obj, "reprunes", 0))
+        print(f"reprune grid: {fam} family/derivation passes, "
+              f"{obj.grid_hits} pure grid lookups")
+    if args.spec and args.shards > 1:
+        built = structural_build_count() - b0
+        print(f"sharded sweep: {built} structural builds for "
+              f"{args.shards} shards "
+              f"({'OK — one per shard' if built == args.shards else 'REBUILD LEAK'})")
     if args.out:
         with open(args.out, "w") as f:
             json.dump([{"params": t.params, "values": t.values}

@@ -12,11 +12,11 @@ from repro.core import (
 )
 from repro.core.build import (
     AUTO_NND_MIN_N, build_knn, knn_graph_recall as graph_recall, nn_descent,
-    reprune, resolve_backend,
+    nnd_candidate_pools, reprune, reprune_family, resolve_backend,
 )
 from repro.core.build.prune import alpha_prune, pairwise_rows_sqdist
 from repro.core.knn_graph import knn_graph
-from repro.core.nsg import mrng_prune
+from repro.core.nsg import build_nsg, mrng_prune, resolve_pools_backend
 
 
 # ------------------------------------------------------------- nn_descent
@@ -78,7 +78,136 @@ def test_auto_backend_threshold():
     assert resolve_backend("nndescent", 16) == "nndescent"
 
 
+# ----------------------------------------------------- init_ids patching
+
+
+def test_nn_descent_init_ids_patch(ann_data):
+    """The filter+patch reuse path: seeding from a (noisy, partial) table
+    converges with FEWER distance evals than a from-scratch build, at
+    comparable recall."""
+    data = ann_data["data"]
+    _, exact_ids = knn_graph(data, 10)
+    # a deliberately degraded init: the true table with a third of the
+    # entries dropped (what antihub filtering does to the full-data table)
+    drop = jax.random.uniform(jax.random.PRNGKey(5), exact_ids.shape) < 0.33
+    init = jnp.where(drop, -1, exact_ids)
+    _, ids_p, st_p = nn_descent(data, 10, key=jax.random.PRNGKey(0),
+                                init_ids=init, init_passes=1, rounds=3,
+                                with_stats=True)
+    _, ids_f, st_f = nn_descent(data, 10, key=jax.random.PRNGKey(0),
+                                with_stats=True)
+    rec_p = graph_recall(np.asarray(ids_p), np.asarray(exact_ids))
+    rec_f = graph_recall(np.asarray(ids_f), np.asarray(exact_ids))
+    assert st_p.distance_evals < st_f.distance_evals
+    # deterministic: measured 0.952 for the 3-round patch vs 0.987 for the
+    # 15-round full build at a fraction of the evals
+    assert rec_p >= 0.93, (rec_p, rec_f)
+
+
+def test_pipeline_antihub_subset_reuse(ann_data):
+    """With an NN-Descent backend and antihub subsampling, the subset kNN
+    graph is patched from the full-data table instead of rebuilt — and the
+    served recall stays within tolerance of the exact-built pipeline."""
+    base = dict(pca_dim=24, antihub_keep=0.85, graph_degree=12,
+                build_knn_k=12, build_candidates=32, ef_search=64)
+    r = {}
+    for backend in ("exact", "nndescent"):
+        idx = TunedGraphIndex(IndexParams(knn_backend=backend, **base)).fit(
+            ann_data["data"], jax.random.PRNGKey(0))
+        assert idx.ntotal == int(np.ceil(0.85 * ann_data["data"].shape[0]))
+        r[backend] = float(recall_at_k(
+            idx.search(ann_data["queries"], 10)[1], ann_data["true_i"]))
+    assert r["exact"] - r["nndescent"] <= 0.03, r
+
+
+# ------------------------------------------------------ NSG pools backends
+
+
+def test_resolve_pools_backend():
+    assert resolve_pools_backend("search", None) == "search"
+    assert resolve_pools_backend("nndescent", None) == "nndescent"
+    assert resolve_pools_backend("auto", None) == "search"
+    assert resolve_pools_backend("auto", jnp.zeros((2, 2))) == "nndescent"
+    with pytest.raises(ValueError, match="pools backend"):
+        resolve_pools_backend("bogus", None)
+
+
+def test_nnd_pools_contract(ann_data):
+    data = ann_data["data"]
+    kd, ki = build_knn(data, 12, backend="exact")
+    pi, pd, evals = nnd_candidate_pools(data, ki, kd, 32)
+    pi, pd = np.asarray(pi), np.asarray(pd)
+    n = data.shape[0]
+    assert pi.shape == pd.shape == (n, 32)
+    assert (pi != np.arange(n)[:, None]).all()          # self excluded
+    finite_as_big = np.where(np.isfinite(pd), pd, 1e30)
+    assert (np.diff(finite_as_big, axis=1) >= -1e-6).all()   # ascending
+    assert (pi[~np.isfinite(pd)] == -1).all()           # inf tail is -1
+    for row in range(0, n, 97):                         # no dup ids per row
+        v = pi[row][pi[row] >= 0]
+        assert len(np.unique(v)) == len(v)
+    # forward/reverse entries are free; only the deduped 1-hop expansion
+    # pays — far below one beam search per node, well above zero
+    assert 0 < evals < n * 12 * 12
+
+
+def test_nnd_pools_match_search_pools(ann_data):
+    """ISSUE acceptance (tier-1 scale): table-derived pools reach the
+    search-pool build's recall with several-fold fewer pool evals."""
+    from repro.core.beam_search import beam_search
+    data = ann_data["data"]
+    kd, ki = build_knn(data, 12, backend="exact")
+    recalls, evals = {}, {}
+    for pb in ("search", "nndescent"):
+        g, st = build_nsg(data, ki, degree=12, n_candidates=32,
+                          pools_backend=pb, knn_dists=kd, with_stats=True)
+        assert st.pools_backend == pb
+        entry = jnp.full((ann_data["queries"].shape[0],), g.medoid,
+                         jnp.int32)
+        _, ids, _ = beam_search(ann_data["queries"], data, g.neighbors,
+                                entry, ef=48, k=10)
+        recalls[pb] = float(recall_at_k(ids, ann_data["true_i"]))
+        evals[pb] = st.pool_evals
+    assert recalls["search"] - recalls["nndescent"] <= 0.01, recalls
+    assert evals["nndescent"] * 5 <= evals["search"], evals
+
+
+def test_build_nsg_auto_resolves_by_dists(ann_data):
+    data = ann_data["data"][:500]
+    kd, ki = build_knn(data, 10, backend="exact")
+    _, st = build_nsg(data, ki, degree=10, n_candidates=24,
+                      knn_dists=kd, with_stats=True)
+    assert st.pools_backend == "nndescent"
+    _, st2 = build_nsg(data, ki, degree=10, n_candidates=24,
+                       with_stats=True)
+    assert st2.pools_backend == "search"
+    # explicit nndescent without dists recomputes them (one gather pass)
+    _, st3 = build_nsg(data, ki, degree=10, n_candidates=24,
+                       pools_backend="nndescent", with_stats=True)
+    assert st3.pools_backend == "nndescent"
+    assert st3.pool_evals >= data.shape[0] * 10
+
+
 # ------------------------------------------------- alpha_prune / reprune
+
+
+def test_reprune_family_members_bit_identical(ann_data):
+    """The vmapped (alpha, degree) grid: every member is bit-identical to
+    the one-at-a-time reprune it replaces (alphas share the sorted
+    adjacency, degrees are prefixes of the max-degree scan)."""
+    data = ann_data["data"][:300]
+    cand, cd = _sorted_pool(data, 300, 32, seed=9)
+    nodes = jnp.arange(300, dtype=jnp.int32)
+    full = alpha_prune(data, nodes, cand, cd, degree=16)
+    alphas = (1.0, 1.1, 1.25)
+    fam = reprune_family(data, full, alphas, chunk=128)
+    assert fam.shape == (3, 300, 16)
+    for ai, a in enumerate(alphas):
+        for degree in (16, 8, 5):
+            direct = reprune(data, full, alpha=a, degree=degree)
+            np.testing.assert_array_equal(
+                np.asarray(fam[ai][:, :degree]), np.asarray(direct),
+                err_msg=f"alpha={a} degree={degree}")
 
 
 def _sorted_pool(data, n, L, seed):
@@ -291,7 +420,17 @@ def test_build_index_knn_backend_override(ann_data):
 def test_nndescent_20k_acceptance():
     """ISSUE acceptance at N=20k: >= 10x fewer distance evaluations than
     exact, kNN-graph recall >= 0.9, and a TunedGraphIndex built on the
-    NN-Descent graph within 0.02 recall@10 of the exact-built one."""
+    NN-Descent graph within 0.02 recall@10 of the exact-built one.
+
+    Margins are pinned to measurement, not hope: with every knob fixed
+    below (seed PRNGKey(2), u_slots=64, init_passes=6, rounds=12,
+    merge_backend="jnp" so TPU CI measures the same arithmetic) the run
+    is deterministic at recall 0.9296 / eval ratio 10.82x (2026-07-29,
+    jax 0.4.37 CPU). The floors sit a small margin below those measured
+    values; if a refactor moves the numbers, re-measure FIRST (free
+    levers that cost no evals: u_slots, init_passes, internal k_build)
+    rather than weakening the floors.
+    """
     from repro.data import clustered_vectors, queries_like
     n, dim = 20000, 16
     data = clustered_vectors(jax.random.PRNGKey(0), n, dim, n_clusters=32)
@@ -300,12 +439,16 @@ def test_nndescent_20k_acceptance():
                                        with_stats=True)
     _, nnd_ids, st = build_knn(data, 10, backend="nndescent",
                                key=jax.random.PRNGKey(2), with_stats=True,
-                               u_slots=64, init_passes=6, rounds=12)
-    assert st.distance_evals * 10 <= ex_stats.distance_evals, (
+                               u_slots=64, init_passes=6, rounds=12,
+                               merge_backend="jnp")
+    ratio = ex_stats.distance_evals / st.distance_evals
+    assert ratio >= 10.0, (
         f"NN-Descent used {st.distance_evals} evals, exact "
-        f"{ex_stats.distance_evals} — less than 10x apart")
+        f"{ex_stats.distance_evals} — ratio {ratio:.2f} < 10 "
+        f"(measured 10.82)")
     rec = graph_recall(np.asarray(nnd_ids), np.asarray(exact_ids))
-    assert rec >= 0.9, f"20k NN-Descent graph recall {rec:.4f} < 0.9"
+    assert rec >= 0.91, (
+        f"20k NN-Descent graph recall {rec:.4f} < 0.91 (measured 0.9296)")
 
     _, true_i = FlatIndex(data).search(queries, 10)
     base = dict(pca_dim=dim, graph_degree=12, build_knn_k=12,
@@ -316,3 +459,30 @@ def test_nndescent_20k_acceptance():
             data, jax.random.PRNGKey(0))
         r[backend] = float(recall_at_k(idx.search(queries, 10)[1], true_i))
     assert r["exact"] - r["nndescent"] <= 0.02, r
+
+
+@pytest.mark.slow
+def test_nsg_pools_20k_acceptance():
+    """ISSUE acceptance at N=20k: NSG built with table-derived pools
+    reaches within 1pt recall@10 of the search-pool build with >= 5x
+    fewer pool distance evaluations."""
+    from repro.core.beam_search import beam_search
+    from repro.data import clustered_vectors, queries_like
+    n, dim = 20000, 16
+    data = clustered_vectors(jax.random.PRNGKey(0), n, dim, n_clusters=32)
+    queries = queries_like(jax.random.PRNGKey(1), data, 96)
+    _, true_i = FlatIndex(data).search(queries, 10)
+    knn_d, knn_ids = build_knn(data, 12, backend="nndescent",
+                               key=jax.random.PRNGKey(2))
+    recalls, evals = {}, {}
+    for pb in ("search", "nndescent"):
+        g, st = build_nsg(data, knn_ids, degree=12, n_candidates=24,
+                          pools_backend=pb, knn_dists=knn_d,
+                          with_stats=True)
+        entry = jnp.full((queries.shape[0],), g.medoid, jnp.int32)
+        _, ids, _ = beam_search(queries, data, g.neighbors, entry,
+                                ef=64, k=10)
+        recalls[pb] = float(recall_at_k(ids, true_i))
+        evals[pb] = st.pool_evals
+    assert recalls["search"] - recalls["nndescent"] <= 0.01, recalls
+    assert evals["nndescent"] * 5 <= evals["search"], evals

@@ -88,3 +88,84 @@ def test_sharded_index_eight_devices():
                          timeout=900)
     assert out.returncode == 0, out.stderr[-4000:]
     assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------- sharded reprune
+
+
+def test_sharded_index_reprune_parity(ann_data):
+    """ISSUE acceptance: a ShardedIndex repruned to (degree, alpha) serves
+    bit-identical neighbors to per-shard ``reprune_nsg``, with zero
+    structural rebuilds."""
+    from repro.core.build import reprune_nsg
+    from repro.core.pipeline import structural_build_count
+
+    mesh = make_host_mesh(data=1, model=1)
+    idx = ShardedIndex(PARAMS, mesh).fit(ann_data["data"])
+    assert idx.n_structural_builds == idx.n_shards
+    before = structural_build_count()
+    der = idx.reprune(alpha=1.2, degree=8)
+    assert structural_build_count() == before, "reprune must not rebuild"
+    assert der.arrays.neighbors.shape[1] == 8
+    off = 0
+    for sub in idx.subs:
+        g = reprune_nsg(sub.base, sub.graph, alpha=1.2, degree=8,
+                        knn_ids=sub.knn_ids)
+        np.testing.assert_array_equal(
+            np.asarray(der.arrays.neighbors)[off:off + sub.ntotal],
+            np.asarray(g.neighbors))
+        off += der._m
+    # the parent keeps serving its own (unchanged) graph
+    d, i = idx.search(ann_data["queries"], 10)
+    assert recall_at_k(i, ann_data["true_i"]) >= 0.85
+    d2, i2 = der.search(ann_data["queries"], 10)
+    assert recall_at_k(i2, ann_data["true_i"]) >= 0.7
+
+
+def test_sharded_factory_reprune_sweep_single_build(ann_data):
+    """ISSUE acceptance: a (graph_degree, alpha) sweep on a sharded spec
+    performs exactly one structural build per shard — every trial is a
+    per-shard reprune derivation or a cache hit."""
+    from repro.core.build import reprune_nsg
+    from repro.core.distributed import ShardedFactoryIndex
+    from repro.core.pipeline import structural_build_count
+    from repro.core.tuning import ShardedRepruneObjective
+
+    before = structural_build_count()
+    idx = ShardedFactoryIndex("NSG12,EP4", n_shards=2).fit(
+        ann_data["data"], key=jax.random.PRNGKey(0))
+    assert structural_build_count() - before == 2    # one per shard
+    assert idx.n_structural_builds == 2
+
+    obj = ShardedRepruneObjective(idx, ann_data["data"],
+                                  ann_data["queries"], k=10, qps_repeats=1)
+    trials = [
+        {"graph_degree": 12, "alpha": 1.0, "ef_search": 48},
+        {"graph_degree": 8, "alpha": 1.0, "ef_search": 48},
+        {"graph_degree": 12, "alpha": 1.2, "ef_search": 64},
+        {"graph_degree": 8, "alpha": 1.0, "ef_search": 96},  # cache hit
+    ]
+    results = [obj.evaluate(t) for t in trials]
+    assert structural_build_count() - before == 2, \
+        "degree/alpha sweep must not trigger rebuilds"
+    assert obj.reprunes == 2            # two distinct derived grid points
+    assert obj.grid_hits == 1           # the repeat was a pure lookup
+    assert all(0.0 <= r.recall <= 1.0 and r.qps > 0 for r in results)
+    assert results[0].recall >= 0.85    # max-config trial serves the base
+
+    # factory-level parity: derived shard == reprune_nsg of the sub
+    der = idx.reprune(alpha=1.2, degree=8)
+    for sub, dsub in zip(idx.subs, der.subs):
+        g = reprune_nsg(sub.base, sub.graph, alpha=1.2, degree=8,
+                        knn_ids=sub.knn_ids)
+        np.testing.assert_array_equal(np.asarray(dsub.graph.neighbors),
+                                      np.asarray(g.neighbors))
+
+
+def test_sharded_factory_reprune_rejects_non_graph():
+    from repro.core.distributed import ShardedFactoryIndex
+    import jax as _jax
+    data = _jax.random.normal(_jax.random.PRNGKey(0), (64, 8))
+    idx = ShardedFactoryIndex("Flat", n_shards=2).fit(data)
+    with pytest.raises(TypeError, match="reprune"):
+        idx.reprune(alpha=1.2)

@@ -168,3 +168,85 @@ def test_l2topk_pallas_inside_flat_search(ann_data):
     d, i = l2_topk(ann_data["queries"], ann_data["data"], 10,
                    backend="pallas", block_q=16, block_n=256)
     assert recall_at_k(i, ann_data["true_i"]) == 1.0
+
+
+# -------------------------------------------------------------- topk_merge
+def _keyed_candidates(seed, b, m, n_ids):
+    """Candidate (ids, dists) where duplicate ids carry bit-equal dists —
+    exactly the invariant the real callers guarantee (a pair's distance is
+    computed by the same arithmetic wherever it appears)."""
+    id_dist = jax.random.uniform(jax.random.PRNGKey(seed), (b, n_ids)) + 0.01
+    ids = jax.random.randint(jax.random.PRNGKey(seed + 1), (b, m), -1,
+                             n_ids).astype(jnp.int32)
+    rows = jnp.arange(b)[:, None]
+    ds = jnp.where(ids >= 0, id_dist[rows, jnp.maximum(ids, 0)], jnp.inf)
+    return ids, ds
+
+
+@pytest.mark.parametrize("b,kcur,m,k,br", [
+    (17, 8, 19, 8, 8),      # odd sizes, non-pow2 candidate width
+    (64, 12, 44, 12, 64),   # block_rows == b
+    (5, 4, 3, 6, 2),        # fewer candidates than k
+    (33, 20, 64, 10, 16),   # truncating k
+])
+def test_topk_merge_pallas_matches_ref(b, kcur, m, k, br):
+    from repro.kernels.topk_merge import topk_merge
+    from repro.kernels.topk_merge.ref import topk_merge_ref
+
+    cur_i, cur_d = _keyed_candidates(7, b, kcur, 3 * max(kcur, m))
+    # dedup the current rows like a real table (unique valid ids per row)
+    ci = np.array(cur_i)
+    for r in range(b):
+        seen = set()
+        for c in range(kcur):
+            if ci[r, c] in seen:
+                ci[r, c] = -1
+            seen.add(int(ci[r, c]))
+    cur_i = jnp.asarray(ci)
+    cur_d = jnp.where(cur_i >= 0, cur_d, jnp.inf)
+    cur_f = (jax.random.uniform(jax.random.PRNGKey(9), (b, kcur)) < 0.5) \
+        & (cur_i >= 0)
+    cand_i, cand_d = _keyed_candidates(7, b, m, 3 * max(kcur, m))
+
+    ri, rd, rf = topk_merge_ref(cur_i, cur_d, cur_f, cand_i, cand_d, k)
+    pi, pd, pf = topk_merge(cur_i, cur_d, cur_f, cand_i, cand_d, k,
+                            backend="pallas", block_rows=br)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(pi))
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(pd))
+    np.testing.assert_array_equal(np.asarray(rf), np.asarray(pf))
+
+
+@pytest.mark.parametrize("b,m,k", [(23, 37, 9), (8, 8, 8), (50, 130, 24)])
+def test_topk_pool_pallas_matches_ref(b, m, k):
+    from repro.kernels.topk_merge import topk_pool
+    from repro.kernels.topk_merge.ref import topk_pool_ref
+
+    ids, ds = _keyed_candidates(11, b, m, 2 * m)
+    ri, rd = topk_pool_ref(ids, ds, k)
+    pi, pd = topk_pool(ids, ds, k, backend="pallas", block_rows=16)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(pi))
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(pd))
+
+
+def test_topk_merge_backend_dispatch():
+    from repro.kernels.topk_merge import resolve_merge_backend
+    assert resolve_merge_backend("jnp") == "jnp"
+    assert resolve_merge_backend("pallas") == "pallas"
+    # None resolves by platform: jnp everywhere but TPU
+    expected = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert resolve_merge_backend(None) == expected
+    with pytest.raises(ValueError, match="merge backend"):
+        resolve_merge_backend("bogus")
+
+
+def test_nn_descent_merge_backends_agree(ann_data):
+    """The whole NN-Descent build is bit-identical across merge backends
+    (same seed, same rounds — only the sort implementation differs)."""
+    from repro.core.build import nn_descent
+    data = ann_data["data"][:400]
+    d1, i1 = nn_descent(data, 8, key=jax.random.PRNGKey(3), rounds=4,
+                        merge_backend="jnp")
+    d2, i2 = nn_descent(data, 8, key=jax.random.PRNGKey(3), rounds=4,
+                        merge_backend="pallas")
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2))

@@ -161,3 +161,47 @@ def test_single_structural_build_for_cheap_knobs(ann_data):
     assert idx8.graph.neighbors.shape[1] == 8
     # recall stays sane on the derived graphs
     assert all(0.0 <= r.recall <= 1.0 for r in results)
+
+
+def test_reprune_grid_lookup_matches_reprune(ann_data):
+    """The precomputed (alpha, degree) grid serves trials bit-identically
+    to the lazy per-trial reprune it replaced, and counts its lookups."""
+    import jax
+    from repro.core.pipeline import IndexParams
+    from repro.core.tuning import AnnObjective
+
+    base = IndexParams(pca_dim=32, graph_degree=12, build_knn_k=12,
+                       build_candidates=32, ef_search=48)
+    obj = AnnObjective(ann_data["data"], ann_data["queries"], k=10,
+                       base_params=base, qps_repeats=1)
+    idx_a, cached, repruned = obj._get_index(
+        IndexParams(pca_dim=32, graph_degree=8, build_knn_k=12,
+                    build_candidates=32, ef_search=48, alpha=1.2))
+    assert not cached and repruned
+    assert obj.family_prunes == 1 and obj.grid_hits == 1
+    full = obj._build_cache[next(iter(obj._build_cache))]
+    direct = full.reprune(alpha=1.2, degree=8)
+    np.testing.assert_array_equal(np.asarray(idx_a.graph.neighbors),
+                                  np.asarray(direct.graph.neighbors))
+    # a second lookup of the same grid point re-uses the repaired graph
+    obj._get_index(IndexParams(pca_dim=32, graph_degree=8, build_knn_k=12,
+                               build_candidates=32, ef_search=96,
+                               alpha=1.2))
+    assert obj.family_prunes == 1 and obj.grid_hits == 2
+
+
+def test_alpha_snaps_to_grid(ann_data):
+    from repro.core.pipeline import IndexParams
+    from repro.core.tuning import AnnObjective
+
+    obj = AnnObjective(ann_data["data"][:200], ann_data["queries"], k=10,
+                       base_params=IndexParams(
+                           pca_dim=32, graph_degree=8, build_knn_k=8,
+                           build_candidates=16, ef_search=32),
+                       qps_repeats=1)
+    assert obj._snap_alpha(1.1701) == (3, 1.15)
+    assert obj._snap_alpha(1.0) == (0, 1.0)
+    assert obj._snap_alpha(9.9) == (8, 1.4)
+    r = obj.evaluate({"alpha": 1.2349, "ef_search": 32})
+    logged, _ = obj.eval_log[-1]
+    assert logged["alpha"] == 1.25     # the grid point actually served
