@@ -2,7 +2,7 @@
 per N -> ``BENCH_build.json`` at the repo root (CI uploads it next to
 BENCH_qps.json, the accumulating build-cost trajectory).
 
-Two comparisons land in the artifact:
+Three comparisons land in the artifact:
 
   * ``stage="knn"`` — exact O(N^2) kNN construction vs batched NN-Descent
     (the PR-3 gap: orders of magnitude fewer evaluations at scale);
@@ -13,17 +13,29 @@ Two comparisons land in the artifact:
     build path sub-quadratic. Each point carries ``pool_evals`` and the
     resulting graph's recall@10 so the ≥5x eval drop at matched recall is
     visible in CI history.
+  * ``stage="nsg_finish"`` — the finishing pass (reverse interconnect +
+    connectivity repair) on device (``finish_backend="device"``: salted
+    scatter-min reverse buffer, topk_merge union dedup, batched repair
+    rounds) vs the host numpy path. Each point carries
+    ``interconnect_seconds``, ``repair_seconds`` (their sum is
+    ``seconds``), ``repair_rounds`` and the graph's recall@10 — the host
+    O(N * R) pointer loops were the last non-device stage, and the
+    device advantage at the largest measured N is the PR-5 acceptance
+    number.
 
 Wall-clock on the 1-core CI box still favors the exact matmul sweep at
 small N — which is exactly why ``knn_backend="auto"`` switches on N, and
 why both numbers land in the artifact.
 
 Scale via ``BENCH_BUILD_NS`` (comma-separated Ns) and BENCH_DIM/BENCH_Q;
-``BENCH_BUILD_SLOW_N`` appends one NN-Descent-only point (no exact
+``BENCH_BUILD_SLOW_N`` appends one NN-Descent-only point (no exact kNN
 baseline, no search pools — at that scale neither terminates in CI time:
-that is the new ceiling the artifact documents). The CI bench-smoke runs
+that is the new ceiling the artifact documents) plus the host-vs-device
+``nsg_finish`` pair at that N (the host finish still terminates — it is
+merely slow, which is the point being measured). The CI bench-smoke runs
 a tiny instance of exactly this file and fails if the
-``pools_backend="nndescent"`` points are missing.
+``pools_backend="nndescent"`` or ``stage="nsg_finish"`` points are
+missing.
 """
 from __future__ import annotations
 
@@ -84,6 +96,61 @@ def _nsg_pool_points(n, data, knn_d, knn_i, queries, true_i, backends,
         rows.append([f"N={n} pool-eval ratio", f"{ratio:.1f}x", "", ""])
 
 
+def _nsg_finish_points(n, data, knn_d, knn_i, queries, true_i, points,
+                       rows):
+    """Finish ONE shared pre-finish adjacency per backend.
+
+    Phases 1-3 (medoid, table-derived pools, occlusion prune — identical
+    across finish backends, and the dominant build work) run once; each
+    backend then finishes the very same pruned adjacency, so the
+    stage="nsg_finish" pair isolates exactly the work being compared.
+
+    Runs AFTER _nsg_pool_points at the same N on purpose: those builds
+    (finish_backend default = device) compile the device finish kernels
+    at this N's shapes, so the seconds measured here are warm-cache work,
+    not XLA compile time — the same treatment the host path gets. The
+    pools+prune pass here deliberately duplicates the one inside the
+    pool-point builds (~1-2 min at the 100k slow point): build_nsg does
+    not expose its pre-finish adjacency, and keeping its API free of
+    bench-only outputs is worth the extra pass."""
+    from repro.core.build import nnd_candidate_pools, prune_in_chunks
+    from repro.core.build.finish import finish_nsg
+    from repro.core.distances import nearest
+    from repro.core.nsg import NSGGraph
+
+    mean = jnp.mean(data.astype(jnp.float32), axis=0, keepdims=True)
+    _, medoid = nearest(mean, data)
+    medoid = medoid[0].astype(jnp.int32)
+    cand_i, cand_d, _ = nnd_candidate_pools(data, knn_i, knn_d,
+                                            2 * NSG_DEGREE)
+    node_ids = jnp.arange(data.shape[0], dtype=jnp.int32)
+    pre = prune_in_chunks(data, node_ids, cand_i, cand_d, NSG_DEGREE,
+                          2048, 1.0)
+    jax.block_until_ready(pre)
+    finish_secs = {}
+    for fb in ("host", "device"):
+        nbrs, st = finish_nsg(data, pre, medoid, knn_i,
+                              degree=NSG_DEGREE, backend=fb)
+        secs = st.interconnect_seconds + st.repair_seconds
+        finish_secs[fb] = secs
+        graph = NSGGraph(neighbors=jnp.asarray(nbrs), medoid=medoid)
+        rec = _graph_recall10(data, graph, queries, true_i)
+        points.append({
+            "n": n, "dim": DIM, "k": K, "stage": "nsg_finish",
+            "degree": NSG_DEGREE, "finish_backend": st.backend,
+            "seconds": round(secs, 3),
+            "interconnect_seconds": round(st.interconnect_seconds, 3),
+            "repair_seconds": round(st.repair_seconds, 3),
+            "repair_rounds": st.repair_rounds,
+            "nsg_recall_at_10": round(rec, 4),
+        })
+        rows.append([f"N={n} finish={fb}", f"{secs:.2f}s",
+                     f"{st.repair_rounds} repair rounds",
+                     f"recall@10 {rec:.4f}"])
+    ratio = finish_secs["host"] / max(finish_secs["device"], 1e-9)
+    rows.append([f"N={n} finish host/device", f"{ratio:.1f}x", "", ""])
+
+
 def run():
     points, rows = [], []
     for n in NS:
@@ -124,6 +191,9 @@ def run():
         knn_d, knn_i = knn_tables["nndescent"]
         _nsg_pool_points(n, data, knn_d, knn_i, queries, true_i,
                          ("search", "nndescent"), points, rows)
+        # the finishing pass (interconnect + repair), host vs device
+        _nsg_finish_points(n, data, knn_d, knn_i, queries, true_i,
+                           points, rows)
 
     if SLOW_N:
         # the new ceiling: NN-Descent kNN + table-derived pools only —
@@ -149,6 +219,11 @@ def run():
                      f"{stats.distance_evals:.3g} evals", ""])
         _nsg_pool_points(n, data, knn_d, knn_i, queries, true_i,
                          ("nndescent",), points, rows)
+        # host finish still terminates at this N (unlike the quadratic
+        # kNN/pool baselines) — measuring its gap to the device path at
+        # the largest N is this stage's acceptance number
+        _nsg_finish_points(n, data, knn_d, knn_i, queries, true_i,
+                           points, rows)
 
     headers = ["config", "build time", "distance evals", "vs exact"]
     print_table("kNN-graph + NSG-pool build scaling", headers, rows)

@@ -161,6 +161,7 @@ class ANNConfig:
     build_candidates: int = 64       # MRNG candidate pool L
     prune_alpha: float = 1.0         # α-RNG occlusion slack (1.0 = MRNG)
     knn_backend: str = "auto"        # exact | nndescent | auto (core.build)
+    finish_backend: str = "auto"     # host | device | auto (build.finish)
     dtype: str = "float32"
 
 

@@ -11,8 +11,9 @@ Public surface:
 """
 from repro.core.beam_search import beam_search  # noqa: F401
 from repro.core.build import (  # noqa: F401
-    BuildStats, alpha_prune, build_knn, nn_descent, nnd_candidate_pools,
-    reprune, reprune_family, reprune_nsg,
+    BuildStats, FinishStats, RepruneFamily, alpha_prune, build_knn,
+    finish_nsg, nn_descent, nnd_candidate_pools, reprune, reprune_family,
+    reprune_nsg,
 )
 from repro.core.flat import FlatIndex, recall_at_k  # noqa: F401
 from repro.core.index_api import (  # noqa: F401

@@ -13,7 +13,9 @@ exact pass is both faster in wall-clock and free of approximation).
 
 ``build/prune.py`` holds the complementary search-graph side: the α-RNG
 occlusion primitive (``alpha_prune``, MRNG at alpha=1) and the
-rebuild-free ``reprune`` family derivation.
+rebuild-free ``reprune`` family derivation; ``build/finish.py`` the NSG
+finishing pass (reverse interconnect + connectivity repair) with its own
+``finish_backend`` device/host selection.
 """
 from __future__ import annotations
 
@@ -21,20 +23,27 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.core.build.finish import (
+    FINISH_BACKENDS, FinishStats, finish_nsg, reachable_mask, repair,
+    repair_connectivity_device, resolve_finish_backend,
+)
 from repro.core.build.nn_descent import BuildStats, nn_descent
 from repro.core.build.pools import nnd_candidate_pools
 from repro.core.build.prune import (
-    alpha_prune, mark_dups, nsg_from_neighbors, pairwise_rows_sqdist,
-    prune_in_chunks, reprune, reprune_family, reprune_nsg,
-    sorted_adjacency,
+    RepruneFamily, alpha_prune, alpha_prune_mask, mark_dups,
+    nsg_from_neighbors, pairwise_rows_sqdist, prune_in_chunks, reprune,
+    reprune_family, reprune_nsg, rows_sqdist_in_chunks, sorted_adjacency,
 )
 
 __all__ = [
-    "AUTO_NND_MIN_N", "BuildStats", "alpha_prune", "build_knn",
-    "knn_graph_recall", "mark_dups", "nn_descent", "nnd_candidate_pools",
-    "nsg_from_neighbors", "pairwise_rows_sqdist", "prune_in_chunks",
-    "reprune", "reprune_family", "reprune_nsg", "resolve_backend",
-    "sorted_adjacency",
+    "AUTO_NND_MIN_N", "BuildStats", "FINISH_BACKENDS", "FinishStats",
+    "RepruneFamily", "alpha_prune", "alpha_prune_mask", "build_knn",
+    "finish_nsg", "knn_graph_recall", "mark_dups", "nn_descent",
+    "nnd_candidate_pools", "nsg_from_neighbors", "pairwise_rows_sqdist",
+    "prune_in_chunks", "reachable_mask", "repair",
+    "repair_connectivity_device", "reprune", "reprune_family",
+    "reprune_nsg", "resolve_backend", "resolve_finish_backend",
+    "rows_sqdist_in_chunks", "sorted_adjacency",
 ]
 
 

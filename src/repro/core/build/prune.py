@@ -41,12 +41,64 @@ def pairwise_rows_sqdist(q: jax.Array, data: jax.Array,
     return jnp.where(ids >= 0, d, jnp.inf)
 
 
+def rows_sqdist_in_chunks(data: jax.Array, ids: jax.Array,
+                          chunk: int = 2048) -> jax.Array:
+    """Chunked ``pairwise_rows_sqdist`` of row i vs its (N, K) id table.
+
+    The one gather-distance driver shared by every O(N * K) pass in the
+    build stack (sorted adjacencies, union distances, the finish pass).
+    """
+    outs = []
+    for s in range(0, ids.shape[0], chunk):
+        e = min(s + chunk, ids.shape[0])
+        outs.append(pairwise_rows_sqdist(data[s:e], data, ids[s:e]))
+    return jnp.concatenate(outs)
+
+
 @jax.jit
 def mark_dups(ids: jax.Array) -> jax.Array:
     """True at positions holding a value already seen to the left."""
     eq = ids[:, :, None] == ids[:, None, :]                    # (B, L, L)
     tri = jnp.tril(jnp.ones(eq.shape[-2:], bool), k=-1)
     return jnp.any(eq & tri[None], axis=-1) | (ids < 0)
+
+
+def _alpha_scan(data, node_ids, cand_ids, cand_dists, degree, alpha):
+    """The greedy α-RNG occlusion scan, vmapped over a node block.
+
+    Returns (keep (B, degree) ids, kept_mask (B, L) bool) — the mask marks
+    the candidate *positions* that survived, the compact encoding the
+    memory-lean ``reprune_family`` stores instead of id stacks.
+    """
+    L = cand_ids.shape[1]
+
+    def prune_one(p, c_ids, c_d):
+        keep = jnp.full((degree,), -1, jnp.int32)
+        kept_vecs = jnp.zeros((degree, data.shape[1]), jnp.float32)
+        mask = jnp.zeros((L,), bool)
+
+        def body(j, state):
+            keep, kept_vecs, mask, cnt = state
+            q = c_ids[j]
+            dq = c_d[j]
+            qv = data[jnp.maximum(q, 0)].astype(jnp.float32)
+            dr = jnp.sum((kept_vecs - qv) ** 2, axis=-1)       # (degree,)
+            occupied = jnp.arange(degree) < cnt
+            occluded = jnp.any(occupied & (dr < alpha * dq))
+            dup = jnp.any(occupied & (keep == q))
+            ok = ((q >= 0) & (q != p) & (cnt < degree)
+                  & (~occluded) & (~dup))
+            slot = jnp.minimum(cnt, degree - 1)
+            keep = jnp.where(ok, keep.at[slot].set(q), keep)
+            kept_vecs = jnp.where(ok, kept_vecs.at[slot].set(qv), kept_vecs)
+            mask = mask.at[j].set(ok)
+            return keep, kept_vecs, mask, cnt + ok.astype(jnp.int32)
+
+        keep, _, mask, _ = jax.lax.fori_loop(
+            0, L, body, (keep, kept_vecs, mask, 0))
+        return keep, mask
+
+    return jax.vmap(prune_one)(node_ids, cand_ids, cand_dists)
 
 
 @functools.partial(jax.jit, static_argnames=("degree",))
@@ -63,32 +115,23 @@ def alpha_prune(data: jax.Array, node_ids: jax.Array, cand_ids: jax.Array,
     test (the monotonic-graph property); alpha is applied to squared
     distances.
     """
-    L = cand_ids.shape[1]
+    return _alpha_scan(data, node_ids, cand_ids, cand_dists, degree,
+                       alpha)[0]
 
-    def prune_one(p, c_ids, c_d):
-        keep = jnp.full((degree,), -1, jnp.int32)
-        kept_vecs = jnp.zeros((degree, data.shape[1]), jnp.float32)
 
-        def body(j, state):
-            keep, kept_vecs, cnt = state
-            q = c_ids[j]
-            dq = c_d[j]
-            qv = data[jnp.maximum(q, 0)].astype(jnp.float32)
-            dr = jnp.sum((kept_vecs - qv) ** 2, axis=-1)       # (degree,)
-            occupied = jnp.arange(degree) < cnt
-            occluded = jnp.any(occupied & (dr < alpha * dq))
-            dup = jnp.any(occupied & (keep == q))
-            ok = ((q >= 0) & (q != p) & (cnt < degree)
-                  & (~occluded) & (~dup))
-            slot = jnp.minimum(cnt, degree - 1)
-            keep = jnp.where(ok, keep.at[slot].set(q), keep)
-            kept_vecs = jnp.where(ok, kept_vecs.at[slot].set(qv), kept_vecs)
-            return keep, kept_vecs, cnt + ok.astype(jnp.int32)
+@functools.partial(jax.jit, static_argnames=("degree",))
+def alpha_prune_mask(data: jax.Array, node_ids: jax.Array,
+                     cand_ids: jax.Array, cand_dists: jax.Array,
+                     degree: int, alpha: float = 1.0) -> jax.Array:
+    """``alpha_prune``'s survivors as a (B, L) bool position mask.
 
-        keep, _, _ = jax.lax.fori_loop(0, L, body, (keep, kept_vecs, 0))
-        return keep
-
-    return jax.vmap(prune_one)(node_ids, cand_ids, cand_dists)
+    The same greedy scan — the ids ``alpha_prune`` returns are exactly
+    ``cand_ids`` at the True positions, in order. A mask row plus the
+    shared candidate pool reconstructs every degree prefix, which is what
+    lets the reprune grid store one machine word per (alpha, node).
+    """
+    return _alpha_scan(data, node_ids, cand_ids, cand_dists, degree,
+                       alpha)[1]
 
 
 def prune_in_chunks(data, node_ids, cand_ids, cand_dists, degree, chunk,
@@ -105,12 +148,7 @@ def prune_in_chunks(data, node_ids, cand_ids, cand_dists, degree, chunk,
 def sorted_adjacency(data: jax.Array, neighbors: jax.Array,
                      chunk: int = 2048):
     """Adjacency rows as distance-ascending candidate pools (ids, dists)."""
-    n = neighbors.shape[0]
-    ds = []
-    for s in range(0, n, chunk):
-        e = min(s + chunk, n)
-        ds.append(pairwise_rows_sqdist(data[s:e], data, neighbors[s:e]))
-    d = jnp.concatenate(ds)
+    d = rows_sqdist_in_chunks(data, neighbors, chunk)
     order = jnp.argsort(d, axis=1, stable=True)
     return (jnp.take_along_axis(neighbors, order, axis=1),
             jnp.take_along_axis(d, order, axis=1))
@@ -134,8 +172,80 @@ def reprune(data: jax.Array, neighbors: jax.Array, *, alpha: float = 1.0,
                            alpha)
 
 
+@jax.jit
+def _pack_mask(mask: jax.Array) -> jax.Array:
+    """(..., L) bool survivor mask -> (..., ceil(L/32)) uint32 words."""
+    l = mask.shape[-1]
+    w = -(-l // 32)
+    m = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, w * 32 - l)])
+    weights = jnp.left_shift(jnp.uint32(1),
+                             jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(m.reshape(m.shape[:-1] + (w, 32)).astype(jnp.uint32)
+                   * weights, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("degree",))
+def _family_member(cand_ids: jax.Array, masks_a: jax.Array,
+                   degree: int) -> jax.Array:
+    """Unpack one alpha's survivor bitmask into its (N, degree) member.
+
+    ``rank <= degree`` realizes the prefix property: the degree-d member
+    is the first d survivors of the max-degree scan, so one mask serves
+    every degree.
+    """
+    n, rmax = cand_ids.shape
+    pos = jnp.arange(rmax)
+    word = masks_a[:, pos // 32]                               # (N, R)
+    bits = (jnp.right_shift(word, (pos % 32).astype(jnp.uint32))
+            & jnp.uint32(1)) != 0
+    rank = jnp.cumsum(bits.astype(jnp.int32), axis=1)
+    take = bits & (rank <= degree)
+    slot = jnp.where(take, rank - 1, degree)    # overflow col, sliced off
+    rows = jnp.arange(n)[:, None]
+    out = jnp.full((n, degree + 1), -1, jnp.int32
+                   ).at[rows, slot].set(jnp.where(take, cand_ids, -1))
+    return out[:, :degree]
+
+
+class RepruneFamily:
+    """Memory-lean (alpha, degree) reprune grid: packed survivor bitmasks.
+
+    Instead of the (A, N, R) int32 member stack (~9 * N * R * 4 bytes —
+    ~11 GB at 10M nodes), stores one uint32 word per (alpha, node, 32
+    candidates) — an ``(A, N, ceil(R/32))`` array, i.e. effectively
+    (A, N) for R <= 32 — against the ONE shared distance-ascending
+    max-degree adjacency. ``member(a_idx, degree)`` reconstructs any grid
+    member lazily in one unpack pass, bit-identical to the materialized
+    stack slice (tier-1 asserted).
+    """
+
+    def __init__(self, alphas, cand_ids: jax.Array, masks: jax.Array):
+        self.alphas = tuple(float(a) for a in alphas)
+        self.cand_ids = cand_ids     # (N, R) sorted max-degree adjacency
+        self.masks = masks           # (A, N, W) uint32 survivor bits
+
+    @property
+    def shape(self):
+        n, rmax = self.cand_ids.shape
+        return (len(self.alphas), n, rmax)
+
+    def nbytes(self) -> int:
+        """Grid storage beyond the shared adjacency (the lean part)."""
+        return int(self.masks.size) * 4
+
+    def member(self, a_idx: int, degree: Optional[int] = None) -> jax.Array:
+        """(N, degree) ids == ``reprune(..., alpha=alphas[a_idx], degree)``."""
+        rmax = self.cand_ids.shape[1]
+        degree = rmax if degree is None else min(degree, rmax)
+        return _family_member(self.cand_ids, self.masks[a_idx], degree)
+
+    def materialize(self) -> jax.Array:
+        """The full (A, N, R) stack (tests / small-N compat)."""
+        return jnp.stack([self.member(i) for i in range(len(self.alphas))])
+
+
 def reprune_family(data: jax.Array, neighbors: jax.Array, alphas,
-                   chunk: int = 2048) -> jax.Array:
+                   chunk: int = 2048, materialize: bool = True):
     """The whole Pareto-relevant (alpha, degree) grid in ONE vmapped pass.
 
     Every alpha shares the same distance-ascending candidate pool (the
@@ -143,12 +253,17 @@ def reprune_family(data: jax.Array, neighbors: jax.Array, alphas,
     grid is a ``vmap`` of the occlusion scan over the alpha axis; and a
     smaller ``degree`` is a *prefix* of the max-degree scan (the greedy
     rule only ever tests a candidate against earlier-kept ones), so no
-    degree axis is materialized at all. Returns an (A, N, R_max) stack:
+    degree axis is materialized at all. With ``materialize=True`` returns
+    an (A, N, R_max) stack:
 
         stack[i, :, :d]  ==  reprune(data, neighbors, alpha=alphas[i],
                                      degree=d)          # bit-identical
 
-    making every (alpha, degree) trial a lookup + slice.
+    making every (alpha, degree) trial a lookup + slice. With
+    ``materialize=False`` returns a ``RepruneFamily`` holding only the
+    packed (A, N, ceil(R/32)) uint32 survivor bitmasks — ~R x leaner, the
+    form that scales to 10M nodes — whose ``member(i, d)`` reconstructs
+    the same arrays bit-identically on demand.
     """
     n, rmax = neighbors.shape
     cand_i, cand_d = sorted_adjacency(data, neighbors, chunk)
@@ -157,36 +272,48 @@ def reprune_family(data: jax.Array, neighbors: jax.Array, alphas,
     outs = []
     for s in range(0, n, chunk):
         e = min(s + chunk, n)
-        outs.append(jax.vmap(
-            lambda a, s=s, e=e: alpha_prune(
-                data, node_ids[s:e], cand_i[s:e], cand_d[s:e], rmax,
-                a))(al))
-    return jnp.concatenate(outs, axis=1)
+        if materialize:
+            outs.append(jax.vmap(
+                lambda a, s=s, e=e: alpha_prune(
+                    data, node_ids[s:e], cand_i[s:e], cand_d[s:e], rmax,
+                    a))(al))
+        else:
+            outs.append(_pack_mask(jax.vmap(
+                lambda a, s=s, e=e: alpha_prune_mask(
+                    data, node_ids[s:e], cand_i[s:e], cand_d[s:e], rmax,
+                    a))(al)))
+    stacked = jnp.concatenate(outs, axis=1)
+    if materialize:
+        return stacked
+    return RepruneFamily(alphas, cand_i, stacked)
 
 
 def nsg_from_neighbors(data: jax.Array, neighbors: jax.Array, medoid, *,
-                       knn_ids: Optional[jax.Array] = None):
+                       knn_ids: Optional[jax.Array] = None,
+                       finish_backend: str = "auto"):
     """Pruned adjacency -> servable ``NSGGraph`` (connectivity repair).
 
     The shared tail of every rebuild-free derivation path: ``reprune_nsg``
     and the tuner's ``reprune_family`` lookups both end here. ``knn_ids``
     supplies repair parents (the build-time kNN table if the caller kept
-    it; defaults to the adjacency itself).
+    it; defaults to the adjacency itself); ``finish_backend`` selects the
+    repair implementation (``core/build/finish.py`` — device batched
+    rounds by default, the host BFS loop for parity).
     """
-    import numpy as np
-
-    from repro.core.nsg import NSGGraph, _ensure_connected
+    from repro.core.build.finish import repair
+    from repro.core.nsg import NSGGraph
 
     parents = knn_ids if knn_ids is not None else neighbors
-    nbrs = _ensure_connected(np.array(neighbors), np.asarray(data),
-                             int(medoid), np.asarray(parents))
+    nbrs, _ = repair(data, neighbors, medoid, parents,
+                     backend=finish_backend)
     return NSGGraph(neighbors=jnp.asarray(nbrs), medoid=jnp.asarray(
         medoid, jnp.int32))
 
 
 def reprune_nsg(data: jax.Array, graph, *, alpha: float = 1.0,
                 degree: Optional[int] = None,
-                knn_ids: Optional[jax.Array] = None, chunk: int = 2048):
+                knn_ids: Optional[jax.Array] = None, chunk: int = 2048,
+                finish_backend: str = "auto"):
     """``reprune`` + NSG connectivity repair -> a servable ``NSGGraph``.
 
     ``knn_ids`` supplies repair parents (the build-time kNN table if the
@@ -194,4 +321,5 @@ def reprune_nsg(data: jax.Array, graph, *, alpha: float = 1.0,
     """
     nbrs = reprune(data, graph.neighbors, alpha=alpha, degree=degree,
                    chunk=chunk)
-    return nsg_from_neighbors(data, nbrs, graph.medoid, knn_ids=knn_ids)
+    return nsg_from_neighbors(data, nbrs, graph.medoid, knn_ids=knn_ids,
+                              finish_backend=finish_backend)

@@ -10,10 +10,15 @@ chasing ever happens on the hot path.
 Per-shard builds run through the ``core.build`` substrate: the shard's
 ``IndexParams.knn_backend`` selects exact vs NN-Descent kNN-graph
 construction (``"auto"`` flips to NN-Descent once a shard crosses
-``build.AUTO_NND_MIN_N`` rows), so sharded build cost scales with device
-FLOPs rather than N^2 per shard. ``ShardedFactoryIndex`` inherits the same
-selection from its spec string (``,ND<K>``) or its own ``knn_backend=``
-constructor override (forwarded to every per-shard ``build_index`` call).
+``build.AUTO_NND_MIN_N`` rows), and ``IndexParams.finish_backend`` selects
+the NSG finishing pass (device scatter-min interconnect + batched repair
+vs the host numpy parity path, ``core/build/finish.py``) — so sharded
+build cost scales with device FLOPs rather than N^2 (or host pointer
+chasing) per shard, and per-shard ``reprune`` repairs derived graphs on
+device too. ``ShardedFactoryIndex`` inherits the same selection from its
+spec string (``,ND<K>``) or its own ``knn_backend=`` /
+``finish_backend=`` constructor overrides (forwarded to every per-shard
+``build_index`` call).
 """
 from __future__ import annotations
 
@@ -318,10 +323,12 @@ class ShardedFactoryIndex:
     """
 
     def __init__(self, spec: str, n_shards: int = 2,
-                 knn_backend: Optional[str] = None):
+                 knn_backend: Optional[str] = None,
+                 finish_backend: Optional[str] = None):
         self.spec = spec
         self.n_shards = n_shards
-        self.knn_backend = knn_backend   # per-shard build override
+        self.knn_backend = knn_backend         # per-shard build override
+        self.finish_backend = finish_backend   # per-shard finish override
         self.subs: list = []
         # the max-degree shards fit() built: reprune always derives from
         # these (NOT from self.subs, which on a derived index are already
@@ -347,7 +354,8 @@ class ShardedFactoryIndex:
         self.subs = [
             build_index(inner_spec, data[bounds[i]:bounds[i + 1]],
                         key=jax.random.fold_in(key, i),
-                        knn_backend=self.knn_backend)
+                        knn_backend=self.knn_backend,
+                        finish_backend=self.finish_backend)
             for i in range(self.n_shards)
         ]
         self._structural_subs = self.subs

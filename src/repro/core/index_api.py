@@ -236,22 +236,31 @@ def parse_spec(spec: str, dim: int) -> Tuple[Optional[int], Any]:
 
 def build_index(spec: str, data: jax.Array, *,
                 key: Optional[jax.Array] = None,
-                knn_backend: Optional[str] = None) -> Index:
+                knn_backend: Optional[str] = None,
+                finish_backend: Optional[str] = None) -> Index:
     """Build + fit an index from a factory string (the one-call entry point).
 
     ``knn_backend`` overrides the build-time kNN-graph backend ("exact" |
     "nndescent" | "auto") for families that build one (NSG); the spec's own
-    ``,ND<K>`` suffix is the in-grammar equivalent.
+    ``,ND<K>`` suffix is the in-grammar equivalent. ``finish_backend``
+    overrides the NSG finishing pass ("host" | "device" | "auto",
+    ``core/build/finish.py``) the same way.
 
     >>> idx = build_index("PCA16,IVF64", data)
     >>> dists, ids = idx.search(queries, 10, SearchParams(nprobe=4))
     """
     pca_dim, index = parse_spec(spec, data.shape[1])
-    if knn_backend is not None:
+    overrides = {k: v for k, v in (("knn_backend", knn_backend),
+                                   ("finish_backend", finish_backend))
+                 if v is not None}
+    if overrides:
         from dataclasses import replace as _replace
         params = getattr(index, "params", None)
-        if params is not None and hasattr(params, "knn_backend"):
-            index.params = _replace(params, knn_backend=knn_backend)
+        if params is not None:
+            overrides = {k: v for k, v in overrides.items()
+                         if hasattr(params, k)}
+            if overrides:
+                index.params = _replace(params, **overrides)
     if pca_dim is not None:
         index = PreprocessedIndex(pca_dim, index)
     index = index.fit(data, key=key)

@@ -16,17 +16,24 @@ Build phases:
   3. MRNG occlusion pruning — the sequential heap walk becomes a fixed-length
      masked fori_loop vmapped over nodes (O(L * R) distance checks per node,
      all MXU matmuls);
-  4. reverse-edge interconnect + re-prune (host assembles the ragged reverse
-     lists; pruning reuses 3);
-  5. connectivity repair — BFS from the medoid, unreachable nodes get an edge
-     from their nearest reachable kNN parent (host numpy, one-shot).
+  4. reverse-edge interconnect + re-prune (``core/build/finish.py``,
+     selected by ``finish_backend``: the device path accumulates reverse
+     edges by salted scatter-min and dedups the union through
+     ``kernels/topk_merge``; the host path keeps the original ragged
+     append as the parity baseline);
+  5. connectivity repair — reachability + batched attach of unreachable
+     nodes beneath their nearest reachable kNN parent (device: vectorized
+     frontier propagation + one-attach-per-parent rounds; host: the
+     original numpy BFS loop).
 
-Phases 1-4 dominate (>99% of distance work) and run on device; phase 5 is
-graph surgery, O(N * R) pointer work, inherently host-side.
+With ``finish_backend="device"`` (what ``"auto"`` resolves to) every
+phase runs on device as fixed-shape jitted ops — no host round-trip
+between the candidate pools and the final servable graph.
 ``build_nsg(with_stats=True)`` returns an ``NSGBuildStats`` whose
 ``pool_evals`` counts phase 2's database-distance evaluations exactly —
-the quantity the pools backends compete on (occlusion-test distances in
-phases 3-4 are identical across backends and tracked separately).
+the quantity the pools backends compete on — and whose
+``interconnect_seconds`` / ``repair_seconds`` / ``repair_rounds`` time
+the finishing stages the finish backends compete on.
 
 The pruning primitive itself lives in ``core/build/prune.py`` as the α-RNG
 rule (``alpha_prune``); ``mrng_prune`` below is its alpha=1 specialization,
@@ -43,12 +50,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.beam_search import beam_search
+from repro.core.build.finish import finish_nsg, resolve_finish_backend
 from repro.core.build.pools import nnd_candidate_pools
 from repro.core.build.prune import (
-    alpha_prune, mark_dups as _mark_dups, pairwise_rows_sqdist,
-    prune_in_chunks,
+    alpha_prune, pairwise_rows_sqdist, prune_in_chunks,
+    rows_sqdist_in_chunks,
 )
-from repro.core.distances import nearest, pairwise_sqdist
+from repro.core.distances import nearest
 from repro.kernels.topk_merge import topk_pool
 
 
@@ -63,7 +71,13 @@ class NSGBuildStats(NamedTuple):
     n: int
     degree: int
     pool_evals: int        # phase-2 database-distance evaluations
-    prune_evals: int       # phases 3-4 (identical across pools backends)
+    prune_evals: int       # phases 3-4, derived from the ACTUAL pool and
+    # union widths (a capped reverse buffer or changed n_candidates is
+    # reflected, never silently desynced from a hardcoded formula)
+    finish_backend: str = "host"    # "host" | "device" (resolved)
+    interconnect_seconds: float = 0.0   # phase-4 wall-clock (to ready)
+    repair_seconds: float = 0.0         # phase-5 wall-clock (to ready)
+    repair_rounds: int = 0              # attach rounds until reachable
 
 
 POOLS_BACKENDS = ("search", "nndescent", "auto")
@@ -91,7 +105,8 @@ def mrng_prune(data: jax.Array, node_ids: jax.Array, cand_ids: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def _candidate_pools(data, knn_ids, medoid, n_candidates, chunk):
+def _candidate_pools(data, knn_ids, medoid, n_candidates, chunk,
+                     merge_backend=None):
     """Per-node candidate pools: beam-search the kNN graph toward each node,
     then union the node's own kNN list. Returns (N, L) ids + dists sorted
     plus the distance-evaluation count (hops * K expansions + the entry
@@ -113,7 +128,7 @@ def _candidate_pools(data, knn_ids, medoid, n_candidates, chunk):
         ids = jnp.concatenate([i_pool, own], axis=1)
         ds = jnp.concatenate([d_pool, own_d], axis=1)
         # dedup: first occurrence (the nearest copy) wins
-        ids, ds = topk_pool(ids, ds, ef)
+        ids, ds = topk_pool(ids, ds, ef, backend=merge_backend)
         pools_i.append(ids)
         pools_d.append(ds)
     evals = sum(int(np.sum(np.asarray(h), dtype=np.int64)) * k
@@ -130,17 +145,29 @@ def build_nsg(data: jax.Array, knn_ids: jax.Array, *, degree: int,
               n_candidates: int = 64, chunk: int = 2048,
               alpha: float = 1.0, pools_backend: str = "auto",
               knn_dists: Optional[jax.Array] = None,
+              finish_backend: str = "auto",
+              rev_cap: Optional[int] = None,
+              merge_backend: Optional[str] = None,
               with_stats: bool = False):
     """Build an NSG over ``data`` from its kNN graph.
 
     ``pools_backend`` picks phase 2: ``"search"`` (beam-search pools, the
     classic recipe), ``"nndescent"`` (table-derived pools — requires or
     recomputes ``knn_dists``), or ``"auto"`` (table-derived whenever
-    ``knn_dists`` is provided). Returns the ``NSGGraph`` — plus an
-    ``NSGBuildStats`` when ``with_stats`` is set.
+    ``knn_dists`` is provided). ``finish_backend`` picks phases 4-5
+    (``core/build/finish.py``): ``"device"`` — scatter-min reverse
+    interconnect + batched repair, fixed-shape jitted (what ``"auto"``
+    resolves to); ``"host"`` — the original numpy path, the parity
+    baseline. ``rev_cap`` bounds the reverse buffer (default 2 * degree).
+    ``merge_backend`` pins the ``kernels/topk_merge`` primitive behind
+    every sort/dedup in the build — phase-2 pool assembly AND the
+    finishing pass — (None = platform default: Pallas on TPU, jnp
+    elsewhere). Returns the ``NSGGraph`` — plus an ``NSGBuildStats`` when
+    ``with_stats`` is set.
     """
     n = data.shape[0]
     resolved = resolve_pools_backend(pools_backend, knn_dists)
+    resolved_finish = resolve_finish_backend(finish_backend)
     mean = jnp.mean(data.astype(jnp.float32), axis=0, keepdims=True)
     _, medoid = nearest(mean, data)
     medoid = medoid[0].astype(jnp.int32)
@@ -148,134 +175,42 @@ def build_nsg(data: jax.Array, knn_ids: jax.Array, *, degree: int,
     if resolved == "nndescent":
         if knn_dists is None:
             # explicit request without table dists: one O(N*K) gather pass
-            knn_dists = _dists_in_chunks(
-                data, jnp.arange(n, dtype=jnp.int32), knn_ids, chunk)
+            knn_dists = rows_sqdist_in_chunks(data, knn_ids, chunk)
             pool_evals = int(n) * int(knn_ids.shape[1])
         else:
             pool_evals = 0
         cand_i, cand_d, ev = nnd_candidate_pools(
-            data, knn_ids, knn_dists, n_candidates, chunk=chunk)
+            data, knn_ids, knn_dists, n_candidates, chunk=chunk,
+            merge_backend=merge_backend)
         pool_evals += ev
     else:
         cand_i, cand_d, pool_evals = _candidate_pools(
-            data, knn_ids, medoid, n_candidates, chunk)
+            data, knn_ids, medoid, n_candidates, chunk, merge_backend)
     node_ids = jnp.arange(n, dtype=jnp.int32)
     nbrs = prune_in_chunks(data, node_ids, cand_i, cand_d, degree, chunk,
                            alpha)
 
-    # --- reverse-edge interconnect (host: ragged append) ---
-    nbrs_np = np.asarray(nbrs)
-    rev_lists = [[] for _ in range(n)]
-    src, dst = np.nonzero(nbrs_np >= 0)
-    for p, q in zip(src, nbrs_np[src, dst]):
-        rev_lists[q].append(p)
-    cap = 2 * degree
-    rev = np.full((n, cap), -1, np.int32)
-    for v, lst in enumerate(rev_lists):
-        lst = lst[:cap]
-        rev[v, : len(lst)] = lst
-    # union(current nbrs, reverse proposals) -> re-prune to degree
-    union = np.concatenate([nbrs_np, rev], axis=1)             # (N, 3R)
-    union_j = jnp.asarray(union)
-    union_d = _dists_in_chunks(data, node_ids, union_j, chunk)
-    order = jnp.argsort(union_d, axis=1)
-    union_j = jnp.take_along_axis(union_j, order, axis=1)
-    union_d = jnp.take_along_axis(union_d, order, axis=1)
-    dup = _mark_dups(union_j)
-    union_j = jnp.where(dup, -1, union_j)
-    union_d = jnp.where(dup, jnp.inf, union_d)
-    order = jnp.argsort(union_d, axis=1)
-    union_j = jnp.take_along_axis(union_j, order, axis=1)
-    union_d = jnp.take_along_axis(union_d, order, axis=1)
-    nbrs = prune_in_chunks(data, node_ids, union_j, union_d, degree, chunk,
-                           alpha)
-
-    nbrs = _ensure_connected(np.array(nbrs), np.asarray(data),
-                             int(medoid), np.asarray(knn_ids))
+    # --- finishing pass: reverse interconnect + connectivity repair ---
+    nbrs, fstats = finish_nsg(
+        data, nbrs, medoid, knn_ids, degree=degree, alpha=alpha,
+        chunk=chunk, backend=resolved_finish, rev_cap=rev_cap,
+        merge_backend=merge_backend)
     graph = NSGGraph(neighbors=jnp.asarray(nbrs), medoid=medoid)
     if with_stats:
         # fixed-shape occlusion + interconnect work, identical across
-        # pools backends: phase-3 scan (L * R per node), the union
-        # distance pass (3R per node), the phase-4 re-prune (3R * R)
-        prune_evals = n * (cand_i.shape[1] * degree + 3 * degree
-                           + 3 * degree * degree)
+        # pools backends and DERIVED from the widths actually built:
+        # phase-3 scan (L * degree per node), the union distance pass
+        # (what the finish backend actually issued — the device path
+        # reuses forward distances for reverse edges), the phase-4
+        # re-prune (union_width * degree per node)
+        prune_evals = (n * cand_i.shape[1] * degree
+                       + fstats.union_dist_evals
+                       + n * fstats.union_width * degree)
         return graph, NSGBuildStats(
             pools_backend=resolved, n=n, degree=degree,
-            pool_evals=int(pool_evals), prune_evals=int(prune_evals))
+            pool_evals=int(pool_evals), prune_evals=int(prune_evals),
+            finish_backend=fstats.backend,
+            interconnect_seconds=fstats.interconnect_seconds,
+            repair_seconds=fstats.repair_seconds,
+            repair_rounds=fstats.repair_rounds)
     return graph
-
-
-def _dists_in_chunks(data, node_ids, ids, chunk):
-    outs = []
-    for s in range(0, node_ids.shape[0], chunk):
-        e = min(s + chunk, node_ids.shape[0])
-        outs.append(pairwise_rows_sqdist(data[s:e], data, ids[s:e]))
-    return jnp.concatenate(outs)
-
-
-def _ensure_connected(nbrs: np.ndarray, data: np.ndarray, medoid: int,
-                      knn_ids: np.ndarray) -> np.ndarray:
-    """BFS from medoid; attach unreachable nodes beneath their nearest
-    reachable kNN parent (or the medoid), NSG's spanning-tree repair."""
-    n, degree = nbrs.shape
-    protected = {}       # parent -> repair-edge slots: never evicted, so
-    # repairs are monotone and full rows can't ping-pong across rounds
-    for _ in range(64):  # fixpoint: attaching can unlock whole islands
-        seen = np.zeros(n, bool)
-        frontier = [medoid]
-        seen[medoid] = True
-        while frontier:
-            nxt = []
-            for u in frontier:
-                for v in nbrs[u]:
-                    if v >= 0 and not seen[v]:
-                        seen[v] = True
-                        nxt.append(int(v))
-            frontier = nxt
-        missing = np.nonzero(~seen)[0]
-        if missing.size == 0:
-            break
-        for u in missing:
-            def try_attach(parent):
-                row = nbrs[parent]
-                free = np.nonzero(row < 0)[0]
-                if free.size:
-                    slot = int(free[0])
-                else:
-                    # evict the farthest *evictable* edge; protected repair
-                    # edges stay, else repairs undo each other forever
-                    dr = ((data[row] - data[parent]) ** 2).sum(-1)
-                    for ss in protected.get(parent, ()):
-                        dr[ss] = -1.0
-                    slot = int(np.argmax(dr))
-                    if dr[slot] < 0:
-                        return False        # row is all repair edges
-                nbrs[parent, slot] = u
-                protected.setdefault(parent, set()).add(slot)
-                seen[u] = True  # u reachable; its subtree fixed next round
-                return True
-
-            # cheap path first: u's reachable kNNs as parents
-            placed = any(try_attach(int(p)) for p in knn_ids[u]
-                         if p >= 0 and seen[p])
-            if not placed:
-                # fallback (only when no kNN parent placed u): nearest
-                # reachable nodes by true distance — over the LIVE seen
-                # set, so nodes attached earlier this round can chain (a
-                # far-out cluster attaches internally instead of every
-                # member thrashing one distant parent's full row)
-                seen_ids = np.nonzero(seen)[0]
-                du = ((data[seen_ids] - data[u]) ** 2).sum(-1)
-                near = [int(p) for p in seen_ids[np.argsort(du)[:16]]]
-                placed = any(try_attach(p) for p in near)
-                if not placed:
-                    # every candidate row saturated with protected repairs
-                    # (pathological): force-evict from the nearest parent
-                    # so connectivity is guaranteed, not best-effort
-                    parent = near[0]
-                    dr = ((data[nbrs[parent]] - data[parent]) ** 2).sum(-1)
-                    slot = int(np.argmax(dr))
-                    nbrs[parent, slot] = u
-                    protected.setdefault(parent, set()).add(slot)
-                    seen[u] = True
-    return nbrs

@@ -63,6 +63,11 @@ class IndexParams:
     # explicitly "exact" (the table's distances are in hand either way;
     # only an explicit exact request keeps the classic beam pools).
     pools_backend: str = "auto"
+    # NSG finishing pass (core/build/finish): "device" runs the reverse
+    # interconnect + connectivity repair as fixed-shape jitted ops (what
+    # "auto" resolves to), "host" keeps the original numpy path as the
+    # parity baseline. Also selects the repair path under reprune().
+    finish_backend: str = "auto"
 
     @staticmethod
     def from_config(cfg: ANNConfig) -> "IndexParams":
@@ -73,7 +78,8 @@ class IndexParams:
             build_candidates=cfg.build_candidates,
             alpha=getattr(cfg, "prune_alpha", 1.0),
             knn_backend=getattr(cfg, "knn_backend", "auto"),
-            pools_backend=getattr(cfg, "pools_backend", "auto"))
+            pools_backend=getattr(cfg, "pools_backend", "auto"),
+            finish_backend=getattr(cfg, "finish_backend", "auto"))
 
 
 class TunedGraphIndex:
@@ -160,7 +166,8 @@ class TunedGraphIndex:
         self.graph = build_nsg(base, knn_ids, degree=p.graph_degree,
                                n_candidates=p.build_candidates,
                                alpha=p.alpha, pools_backend=pools,
-                               knn_dists=knn_dists)
+                               knn_dists=knn_dists,
+                               finish_backend=p.finish_backend)
         self.eps = fit_entry_points(key, base, p.ep_clusters)
         self.build_seconds = time.perf_counter() - t0
         _N_STRUCTURAL_BUILDS += 1
@@ -190,7 +197,8 @@ class TunedGraphIndex:
         """
         assert self.graph is not None, "fit() first"
         g = reprune_nsg(self.base, self.graph, alpha=alpha, degree=degree,
-                        knn_ids=self.knn_ids)
+                        knn_ids=self.knn_ids,
+                        finish_backend=self.params.finish_backend)
         out = self.with_graph(g)
         out.params = replace(self.params, alpha=alpha,
                              graph_degree=g.neighbors.shape[1])

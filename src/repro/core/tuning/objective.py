@@ -8,8 +8,11 @@ build is made ONCE at the structural maximum (base graph_degree, pruning
 alpha=1 — the densest member of the α-reachable family). At that moment the
 whole Pareto-relevant (alpha, degree) *reprune grid* is precomputed in one
 vmapped pass over the shared sorted max-degree adjacency
-(``build.prune.reprune_family`` — alphas vmapped, degrees are prefixes), so
-trials that move:
+(``build.prune.reprune_family`` — alphas vmapped, degrees are prefixes),
+stored memory-lean as packed survivor bitmasks (``materialize=False`` —
+one uint32 per (alpha, node, 32 candidates) instead of the (A, N, R) id
+stack, the form that scales to 10M nodes) and reconstructed lazily per
+trial, so trials that move:
 
   * ``graph_degree`` / ``alpha``  — snap alpha to the grid and *look up*
     their adjacency (a slice of the family stack + connectivity repair —
@@ -107,7 +110,7 @@ class AnnObjective:
             alpha_grid if alpha_grid is not None else DEFAULT_ALPHA_GRID))
         _, self.true_i = FlatIndex(data).search(queries, k)
         self._build_cache: Dict[tuple, TunedGraphIndex] = {}
-        self._family_cache: Dict[tuple, object] = {}   # skey -> (A, N, R)
+        self._family_cache: Dict[tuple, object] = {}   # skey -> RepruneFamily
         self._graph_cache: Dict[tuple, object] = {}
         self._ep_cache: Dict[tuple, object] = {}
         self._antihub_ids = None
@@ -150,9 +153,11 @@ class AnnObjective:
             self._build_cache[skey] = full
             # the whole (alpha, degree) family in one vmapped pass over
             # the just-built max-degree graph: every degree/alpha trial
-            # on this structure is now a slice + connectivity repair
+            # on this structure is now a bitmask unpack + connectivity
+            # repair (packed storage — R x leaner than the id stack)
             self._family_cache[skey] = reprune_family(
-                full.base, full.graph.neighbors, self.alpha_grid)
+                full.base, full.graph.neighbors, self.alpha_grid,
+                materialize=False)
             self.family_prunes += 1
             # the build already fit the ep_clusters=1 selector: seed the
             # cache so the first k=1 trial doesn't refit it
@@ -167,8 +172,9 @@ class AnnObjective:
             if gkey not in self._graph_cache:
                 fam = self._family_cache[skey]
                 self._graph_cache[gkey] = nsg_from_neighbors(
-                    full.base, fam[a_idx][:, :degree], full.graph.medoid,
-                    knn_ids=full.knn_ids)
+                    full.base, fam.member(a_idx, degree),
+                    full.graph.medoid, knn_ids=full.knn_ids,
+                    finish_backend=self.base.finish_backend)
             self.grid_hits += 1
             idx = full.with_graph(self._graph_cache[gkey])
         else:

@@ -48,6 +48,11 @@ def main():
                     help="override the build-time kNN-graph backend for "
                          "graph specs (ann family only); the spec's ,ND<K> "
                          "suffix is the in-grammar equivalent")
+    ap.add_argument("--finish-backend", default=None,
+                    choices=["host", "device", "auto"],
+                    help="override the NSG finishing pass for graph specs "
+                         "(ann family only): device jitted interconnect + "
+                         "repair, or the host numpy parity path")
     args = ap.parse_args()
     spec = get_arch(args.arch)
     cfg = spec.smoke_config
@@ -90,7 +95,8 @@ def main():
         data = clustered_vectors(key, 4000, 48, n_clusters=16)
         queries = queries_like(jax.random.PRNGKey(1), data, args.batch * 16)
         idx = build_index(args.spec, data, key=key,
-                          knn_backend=args.knn_backend)
+                          knn_backend=args.knn_backend,
+                          finish_backend=args.finish_backend)
         if args.buckets == "off":
             buckets = None
         elif args.buckets == "auto":

@@ -53,6 +53,11 @@ def main():
                     choices=["exact", "nndescent", "auto"],
                     help="build-time kNN-graph backend (core.build): exact "
                          "O(N^2) pass, NN-Descent refinement, or auto by N")
+    ap.add_argument("--finish-backend", default="auto",
+                    choices=["host", "device", "auto"],
+                    help="NSG finishing pass (build.finish): device "
+                         "scatter-min interconnect + batched repair, or "
+                         "the host numpy parity path (auto = device)")
     ap.add_argument("--max-degree", type=int, default=16,
                     help="structural graph-degree ceiling: the single real "
                          "build per structure happens here; degree/alpha "
@@ -67,7 +72,8 @@ def main():
         from repro.core.pipeline import structural_build_count
         b0 = structural_build_count()
         idx = ShardedFactoryIndex(args.spec, n_shards=args.shards,
-                                  knn_backend=args.knn_backend).fit(
+                                  knn_backend=args.knn_backend,
+                                  finish_backend=args.finish_backend).fit(
             data, key=key)
         obj = ShardedRepruneObjective(idx, data, queries, k=10,
                                       recall_floor=args.recall_floor,
@@ -82,7 +88,8 @@ def main():
         base = IndexParams(pca_dim=args.dim, graph_degree=args.max_degree,
                            build_knn_k=args.max_degree,
                            build_candidates=2 * args.max_degree,
-                           ef_search=64, knn_backend=args.knn_backend)
+                           ef_search=64, knn_backend=args.knn_backend,
+                           finish_backend=args.finish_backend)
         obj = AnnObjective(data, queries, k=10, base_params=base,
                            recall_floor=args.recall_floor, qps_repeats=3)
         space = default_space(args.dim, args.n,

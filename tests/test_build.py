@@ -210,6 +210,31 @@ def test_reprune_family_members_bit_identical(ann_data):
                 err_msg=f"alpha={a} degree={degree}")
 
 
+def test_reprune_family_lazy_bit_identity(ann_data):
+    """ISSUE satellite: the memory-lean family (materialize=False) stores
+    only packed survivor bitmasks — ~R x smaller than the (A, N, R) id
+    stack — yet reconstructs every (alpha, degree) member bit-identically
+    to the materialized path."""
+    data = ann_data["data"][:300]
+    cand, cd = _sorted_pool(data, 300, 32, seed=9)
+    nodes = jnp.arange(300, dtype=jnp.int32)
+    full = alpha_prune(data, nodes, cand, cd, degree=16)
+    alphas = (1.0, 1.1, 1.25)
+    stack = reprune_family(data, full, alphas, chunk=128)
+    fam = reprune_family(data, full, alphas, chunk=128, materialize=False)
+    assert fam.shape == (3, 300, 16)
+    # one uint32 word per (alpha, node): 16x leaner than the id stack here
+    assert fam.nbytes() * 16 == stack.size * 4
+    for ai, a in enumerate(alphas):
+        for degree in (16, 8, 5):
+            np.testing.assert_array_equal(
+                np.asarray(fam.member(ai, degree)),
+                np.asarray(stack[ai][:, :degree]),
+                err_msg=f"alpha={a} degree={degree}")
+    np.testing.assert_array_equal(np.asarray(fam.materialize()),
+                                  np.asarray(stack))
+
+
 def _sorted_pool(data, n, L, seed):
     cand = jax.random.randint(jax.random.PRNGKey(seed), (n, L), 0,
                               n).astype(jnp.int32)
@@ -451,8 +476,11 @@ def test_nndescent_20k_acceptance():
         f"20k NN-Descent graph recall {rec:.4f} < 0.91 (measured 0.9296)")
 
     _, true_i = FlatIndex(data).search(queries, 10)
+    # finish_backend pinned to host: these margins were measured against
+    # the host finishing pass; the device path has its own 20k acceptance
+    # (tests/test_finish.py) with a 0.5pt host-parity band
     base = dict(pca_dim=dim, graph_degree=12, build_knn_k=12,
-                build_candidates=24, ef_search=64)
+                build_candidates=24, ef_search=64, finish_backend="host")
     r = {}
     for backend in ("exact", "nndescent"):
         idx = TunedGraphIndex(IndexParams(knn_backend=backend, **base)).fit(
@@ -476,9 +504,12 @@ def test_nsg_pools_20k_acceptance():
                                key=jax.random.PRNGKey(2))
     recalls, evals = {}, {}
     for pb in ("search", "nndescent"):
+        # finish_backend pinned to host: the 0.0073 measured recall gap
+        # was taken against the host finishing pass (see memory note);
+        # device-finish parity is asserted separately in test_finish.py
         g, st = build_nsg(data, knn_ids, degree=12, n_candidates=24,
                           pools_backend=pb, knn_dists=knn_d,
-                          with_stats=True)
+                          finish_backend="host", with_stats=True)
         entry = jnp.full((queries.shape[0],), g.medoid, jnp.int32)
         _, ids, _ = beam_search(queries, data, g.neighbors, entry,
                                 ef=64, k=10)

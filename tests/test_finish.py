@@ -1,0 +1,298 @@
+"""Tests for the device-resident NSG finishing pass (core/build/finish):
+reverse interconnect, reachability, batched connectivity repair, and the
+host-parity contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.beam_search import beam_search
+from repro.core.build import build_knn, nsg_from_neighbors
+from repro.core.build.finish import (
+    _repair_round, finish_nsg, interconnect, reachable_mask,
+    repair_connectivity_device, resolve_finish_backend,
+)
+from repro.core.flat import FlatIndex, recall_at_k
+from repro.core.nsg import build_nsg
+
+
+def _bfs_reachable(nbrs, medoid):
+    nbrs = np.asarray(nbrs)
+    n = nbrs.shape[0]
+    seen = np.zeros(n, bool)
+    stack = [int(medoid)]
+    seen[stack[0]] = True
+    while stack:
+        u = stack.pop()
+        for v in nbrs[u]:
+            if v >= 0 and not seen[v]:
+                seen[v] = True
+                stack.append(int(v))
+    return seen
+
+
+def _island_graph(key, n_clusters=8, per=40, dim=6, degree=4):
+    """Clustered data whose adjacency is a ring INSIDE each cluster only —
+    n_clusters - 1 islands unreachable from the medoid's component."""
+    parts = []
+    for c in range(n_clusters):
+        parts.append(jax.random.normal(jax.random.fold_in(key, c),
+                                       (per, dim)) + 25.0 * c)
+    data = jnp.concatenate(parts)
+    n = n_clusters * per
+    nbrs = np.full((n, degree), -1, np.int32)
+    for c in range(n_clusters):
+        for i in range(per):
+            nbrs[c * per + i, 0] = c * per + (i + 1) % per
+    _, knn = build_knn(data, 6, backend="exact")
+    return data, jnp.asarray(nbrs), knn
+
+
+def test_resolve_finish_backend():
+    assert resolve_finish_backend("auto") == "device"
+    assert resolve_finish_backend("host") == "host"
+    assert resolve_finish_backend("device") == "device"
+    with pytest.raises(ValueError, match="finish backend"):
+        resolve_finish_backend("bogus")
+    with pytest.raises(ValueError, match="finish backend"):
+        build_nsg(jnp.zeros((4, 2)), jnp.zeros((4, 2), jnp.int32),
+                  degree=2, finish_backend="bogus")
+
+
+# --------------------------------------------------------- reachability
+
+
+def test_reachable_mask_matches_bfs():
+    for seed in range(4):
+        key = jax.random.PRNGKey(seed)
+        n, r = 200, 3
+        nbrs = jax.random.randint(key, (n, r), -2, n).astype(jnp.int32)
+        got = np.asarray(reachable_mask(nbrs, 0))
+        want = _bfs_reachable(nbrs, 0)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_reachable_mask_single_node():
+    nbrs = jnp.full((1, 3), -1, jnp.int32)
+    assert np.asarray(reachable_mask(nbrs, 0)).all()
+
+
+# ----------------------------------------------------- interconnect
+
+
+def test_interconnect_device_vs_host_recall(ann_data):
+    """ISSUE acceptance (tier-1 scale): the device finishing pass lands
+    within 0.5pt recall@10 of the host path and stays fully reachable."""
+    data = ann_data["data"]
+    kd, ki = build_knn(data, 12, backend="exact")
+    recalls = {}
+    for fb in ("host", "device"):
+        g, st = build_nsg(data, ki, degree=12, n_candidates=32,
+                          knn_dists=kd, finish_backend=fb, with_stats=True)
+        assert st.finish_backend == fb
+        assert _bfs_reachable(g.neighbors, g.medoid).all()
+        entry = jnp.full((ann_data["queries"].shape[0],), g.medoid,
+                         jnp.int32)
+        _, ids, _ = beam_search(ann_data["queries"], data, g.neighbors,
+                                entry, ef=64, k=10)
+        recalls[fb] = float(recall_at_k(ids, ann_data["true_i"]))
+    assert abs(recalls["host"] - recalls["device"]) <= 0.005, recalls
+
+
+def test_interconnect_rev_cap_and_eval_accounting(ann_data):
+    """prune_evals is DERIVED from the union width actually built: a
+    capped reverse buffer shrinks the accounting instead of silently
+    desyncing it (ISSUE small fix), and the device path's reverse edges
+    reuse forward distances (union pass = N * R evals, not N * U)."""
+    data = ann_data["data"][:600]
+    n = 600
+    kd, ki = build_knn(data, 10, backend="exact")
+    L, R = 24, 10
+    stats = {}
+    for fb, cap in (("host", None), ("device", None), ("device", R)):
+        _, st = build_nsg(data, ki, degree=R, n_candidates=L,
+                          knn_dists=kd, finish_backend=fb, rev_cap=cap,
+                          with_stats=True)
+        stats[(fb, cap)] = st
+        width = R + (cap if cap is not None else 2 * R)
+        union_evals = n * (width if fb == "host" else R)
+        assert st.prune_evals == (n * L * R + union_evals
+                                  + n * width * R), (fb, cap)
+    # capping the reverse buffer must shrink the accounted work
+    assert (stats[("device", R)].prune_evals
+            < stats[("device", None)].prune_evals)
+    # reverse-distance reuse: device accounts fewer union evals than host
+    assert (stats[("device", None)].prune_evals
+            < stats[("host", None)].prune_evals)
+
+
+def test_interconnect_adds_reverse_reachability():
+    """The interconnect's purpose: nodes pointed AT by many rows gain
+    out-edges back into the graph (union = forward ∪ reverse)."""
+    key = jax.random.PRNGKey(7)
+    data = jax.random.normal(key, (100, 4))
+    # a star: every row points at node 0, node 0 points nowhere
+    nbrs = np.full((100, 4), -1, np.int32)
+    nbrs[1:, 0] = 0
+    out, width, evals = interconnect(data, jnp.asarray(nbrs), degree=4,
+                                     backend="device")
+    out = np.asarray(out)
+    assert width == 12 and evals == 100 * 4
+    assert (out[0] >= 0).sum() > 0          # node 0 now has out-edges
+
+
+# ----------------------------------------------------------- repair
+
+
+def test_repair_islands_full_reachability():
+    for seed in (0, 1, 2):
+        data, nbrs, knn = _island_graph(jax.random.PRNGKey(seed))
+        out, rounds = repair_connectivity_device(data, nbrs, 0, knn)
+        assert _bfs_reachable(out, 0).all(), f"seed {seed}"
+        assert rounds >= 1
+
+
+def test_repair_noop_when_connected():
+    """An already medoid-reachable graph comes back untouched."""
+    n = 50
+    nbrs = np.full((n, 2), -1, np.int32)
+    nbrs[:, 0] = (np.arange(n) + 1) % n            # a ring
+    data = jax.random.normal(jax.random.PRNGKey(0), (n, 3))
+    out, rounds = repair_connectivity_device(
+        data, jnp.asarray(nbrs), 0, jnp.asarray(nbrs))
+    np.testing.assert_array_equal(np.asarray(out), nbrs)
+    assert rounds == 0
+
+
+def test_repair_property_hypothesis():
+    """Property: after device repair EVERY node is reachable from the
+    medoid, whatever the (possibly badly disconnected) input adjacency."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10**6), degree=st.integers(1, 6),
+           edge_p=st.floats(0.0, 1.0))
+    def prop(seed, degree, edge_p):
+        key = jax.random.PRNGKey(seed)
+        n = 60
+        data = jax.random.normal(key, (n, 4))
+        nbrs = jax.random.randint(jax.random.fold_in(key, 1), (n, degree),
+                                  0, n).astype(jnp.int32)
+        drop = jax.random.uniform(jax.random.fold_in(key, 2),
+                                  nbrs.shape) < edge_p
+        nbrs = jnp.where(drop | (nbrs == jnp.arange(n)[:, None]), -1, nbrs)
+        _, knn = build_knn(data, 5, backend="exact")
+        out, _ = repair_connectivity_device(data, nbrs, 0, knn)
+        assert _bfs_reachable(out, 0).all()
+
+    prop()
+
+
+def test_protected_slots_never_evicted():
+    """Regression for the protected-slot eviction invariant: a repair
+    round must never evict a protected edge — even when it is the
+    farthest — and a fully protected row accepts nothing without force."""
+    # 1-D line: node 3 unreachable, must attach beneath parent 1
+    data = jnp.asarray([[0.0], [1.0], [5.0], [100.0]])
+    nbrs = jnp.asarray([[1, 2], [0, 2], [0, 1], [-1, -1]], jnp.int32)
+    reach = jnp.asarray([True, True, True, False])
+    parent = jnp.asarray([-1, -1, -1, 1], jnp.int32)
+
+    # slot 1 (the FARTHEST edge, d(1,2)=16 > d(1,0)=1) is protected: the
+    # eviction must fall back to the nearer unprotected slot 0
+    prot = jnp.asarray([[False, False], [False, True],
+                        [False, False], [False, False]])
+    out, prot2, placed, n_evict = _repair_round(
+        data, nbrs, prot, reach, parent, jnp.asarray(False))
+    assert int(np.asarray(placed).sum()) == 1 and int(n_evict) == 1
+    assert np.asarray(out)[1].tolist() == [3, 2]       # slot 1 survived
+    assert np.asarray(prot2)[1].tolist() == [True, True]
+
+    # fully protected row: nothing placed, row untouched...
+    prot_full = prot.at[1].set(True)
+    out, prot3, placed, _ = _repair_round(
+        data, nbrs, prot_full, reach, parent, jnp.asarray(False))
+    assert not np.asarray(placed).any()
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(nbrs))
+    # ...until force (the pathological fallback) overrides protection
+    out, _, placed, _ = _repair_round(
+        data, nbrs, prot_full, reach, parent, jnp.asarray(True))
+    assert int(np.asarray(placed).sum()) == 1
+    assert 3 in np.asarray(out)[1].tolist()
+
+
+def test_repair_rounds_chain_islands():
+    """Monotone chaining: islands attach across rounds (a node attached
+    in round k serves as a parent in round k+1) and repair edges from
+    earlier rounds survive to the end."""
+    data, nbrs, knn = _island_graph(jax.random.PRNGKey(5), n_clusters=6)
+    out, prot, rounds = repair_connectivity_device(
+        data, nbrs, 0, knn, return_protected=True)
+    out, prot = np.asarray(out), np.asarray(prot)
+    assert _bfs_reachable(out, 0).all()
+    # every protected slot holds a live repair edge
+    assert (out[prot] >= 0).all()
+    assert prot.sum() >= 5          # >= one repair edge per island
+
+
+# ------------------------------------------------- derivation-path wiring
+
+
+def test_nsg_from_neighbors_backend_parity(ann_data):
+    """The reprune tail (nsg_from_neighbors) repairs on device by default
+    and the result is reachable under both backends."""
+    data = ann_data["data"][:500]
+    _, ki = build_knn(data, 8, backend="exact")
+    g = build_nsg(data, ki, degree=8, n_candidates=24,
+                  finish_backend="host")
+    sparse = jnp.where(jnp.arange(8)[None, :] < 3, g.neighbors, -1)
+    for fb in ("host", "device"):
+        out = nsg_from_neighbors(data, sparse, g.medoid, knn_ids=ki,
+                                 finish_backend=fb)
+        assert _bfs_reachable(out.neighbors, out.medoid).all(), fb
+
+
+def test_pipeline_finish_backend_threads_through(ann_data):
+    """IndexParams.finish_backend reaches the build AND the reprune path."""
+    from repro.core import IndexParams, TunedGraphIndex
+    idx = TunedGraphIndex(IndexParams(
+        pca_dim=32, graph_degree=12, build_knn_k=12, build_candidates=24,
+        finish_backend="device")).fit(ann_data["data"])
+    assert _bfs_reachable(idx.graph.neighbors, idx.graph.medoid).all()
+    d = idx.reprune(alpha=1.3, degree=6)
+    assert _bfs_reachable(d.graph.neighbors, d.graph.medoid).all()
+    r = recall_at_k(d.search(ann_data["queries"], 10)[1],
+                    ann_data["true_i"])
+    assert r > 0.5          # sane derived graph, not a degenerate repair
+
+
+# --------------------------------------------------- N=20k acceptance
+
+
+@pytest.mark.slow
+def test_nsg_finish_20k_acceptance():
+    """ISSUE acceptance at N=20k: the device finishing pass produces a
+    fully medoid-reachable graph with recall@10 within 0.5pt of the host
+    path (seed + merge backend fixed; the wall-clock comparison lives in
+    BENCH_build.json's stage="nsg_finish" points)."""
+    from repro.data import clustered_vectors, queries_like
+    n, dim = 20000, 16
+    data = clustered_vectors(jax.random.PRNGKey(0), n, dim, n_clusters=32)
+    queries = queries_like(jax.random.PRNGKey(1), data, 96)
+    _, true_i = FlatIndex(data).search(queries, 10)
+    knn_d, knn_i = build_knn(data, 12, backend="nndescent",
+                             key=jax.random.PRNGKey(2),
+                             merge_backend="jnp")
+    recalls = {}
+    for fb in ("host", "device"):
+        g, st = build_nsg(data, knn_i, degree=12, n_candidates=24,
+                          knn_dists=knn_d, finish_backend=fb,
+                          merge_backend="jnp", with_stats=True)
+        assert st.finish_backend == fb
+        assert _bfs_reachable(g.neighbors, g.medoid).all(), fb
+        entry = jnp.full((queries.shape[0],), g.medoid, jnp.int32)
+        _, ids, _ = beam_search(queries, data, g.neighbors, entry,
+                                ef=64, k=10)
+        recalls[fb] = float(recall_at_k(ids, true_i))
+    assert abs(recalls["host"] - recalls["device"]) <= 0.005, recalls
