@@ -14,9 +14,9 @@ from __future__ import annotations
 import os
 
 from benchmarks.common import (
-    K, dataset, measure_qps, print_table, save, save_bench_json,
+    DIM, K, dataset, measure_qps, print_table, save, save_bench_json,
 )
-from repro.core import SearchParams, build_index, recall_at_k
+from repro.core import SearchParams, build_index, default_pq_m, recall_at_k
 
 # (spec, tunable SearchParams field, sweep values). HNSW's sequential host
 # build dominates at large BENCH_N; skip it above the cutoff so full-scale
@@ -29,15 +29,23 @@ SWEEPS = [
 ]
 HNSW_BUILD_CUTOFF = int(os.environ.get("BENCH_HNSW_MAX_N", 5000))
 
+# Quantized traversal vs its f32 twin at MATCHED ef_search values: the two
+# sweeps share graph structure and beam width, so at each ef the recall is
+# near-identical and qps_pq / qps_f32 reads off the iso-recall speedup
+# directly (the first sweep above provides the f32 curve; PQ code size
+# auto-tracks BENCH_DIM so the spec stays valid at smoke scale).
+QUANT_EF_VALUES = (16, 32, 64, 128)
+QUANT_SWEEPS = [
+    (f"NSG24,EP32,PQ{default_pq_m(DIM)}x8,Rerank64", "pq"),
+    ("NSG24,EP32,SQ8,Rerank64", "int8"),
+]
+
 
 def run():
     data, queries, ti = dataset()
     points, rows = [], []
-    for spec, knob, values in SWEEPS:
-        if spec.startswith("HNSW") and data.shape[0] > HNSW_BUILD_CUTOFF:
-            print(f"skip {spec}: N={data.shape[0]} > "
-                  f"BENCH_HNSW_MAX_N={HNSW_BUILD_CUTOFF}")
-            continue
+
+    def sweep(spec, knob, values, dist_backend="f32"):
         idx = build_index(spec, data)
         assert knob in idx.search_params_space().names(), (spec, knob)
         for v in values:
@@ -50,9 +58,29 @@ def run():
                 "spec": spec, "knob": knob, "value": v,
                 "recall": round(r, 4), "qps": round(qps, 1),
                 "mem_mb": round(idx.memory_bytes() / 1e6, 2),
+                "dist_backend": dist_backend,
             })
             rows.append([f"{spec} {knob}={v}", round(r, 4), f"{qps:.1f}",
                          f"mem {idx.memory_bytes()/1e6:.1f}MB"])
+
+    for spec, knob, values in SWEEPS:
+        if spec.startswith("HNSW") and data.shape[0] > HNSW_BUILD_CUTOFF:
+            print(f"skip {spec}: N={data.shape[0]} > "
+                  f"BENCH_HNSW_MAX_N={HNSW_BUILD_CUTOFF}")
+            continue
+        sweep(spec, knob, values)
+    for spec, backend in QUANT_SWEEPS:
+        sweep(spec, "ef_search", QUANT_EF_VALUES, dist_backend=backend)
+
+    # matched-ef f32 vs quantized QPS ratios, directly readable in the log
+    f32 = {p["value"]: p["qps"] for p in points
+           if p["spec"] == "NSG24,EP32" and p["dist_backend"] == "f32"}
+    for p in points:
+        if p["dist_backend"] != "f32" and p["value"] in f32:
+            p["qps_vs_f32"] = round(p["qps"] / f32[p["value"]], 2)
+            rows.append([f"{p['spec']} ef={p['value']} vs f32",
+                         p["recall"], f"{p['qps']:.1f}",
+                         f"{p['qps_vs_f32']}x f32"])
 
     headers = ["config", "recall@10", "QPS", ""]
     print_table("QPS-recall frontiers", headers, rows)

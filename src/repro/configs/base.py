@@ -162,6 +162,9 @@ class ANNConfig:
     prune_alpha: float = 1.0         # α-RNG occlusion slack (1.0 = MRNG)
     knn_backend: str = "auto"        # exact | nndescent | auto (core.build)
     finish_backend: str = "auto"     # host | device | auto (build.finish)
+    dist_backend: str = "f32"        # f32 | pq | int8 (core.quant serving)
+    pq_m: int = 0                    # PQ sub-quantizers (0 = auto by dim)
+    rerank: int = 64                 # exact-rerank depth of quantized tail
     dtype: str = "float32"
 
 

@@ -7,6 +7,7 @@ Public surface:
     FlatIndex / recall_at_k             — oracle + metric
     beam_search                         — TPU-native graph traversal
     build_knn / alpha_prune / reprune   — graph-build substrate (core.build)
+    Codec / PQCodec / Int8Codec         — quantized-traversal codecs
     tuning.Study                        — black-box parameter tuning
 """
 from repro.core.beam_search import beam_search  # noqa: F401
@@ -22,4 +23,7 @@ from repro.core.index_api import (  # noqa: F401
 )
 from repro.core.pipeline import (  # noqa: F401
     IndexParams, TunedGraphIndex, build_vanilla_nsg, structural_build_count,
+)
+from repro.core.quant import (  # noqa: F401
+    Codec, Int8Codec, PQCodec, default_pq_m, make_codec,
 )

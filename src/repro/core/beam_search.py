@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.core.distances import match_vma
 from repro.kernels.gather_dist import gather_dist as _kernel_gather_dist
+from repro.kernels.lut_dist import lut_dist as _kernel_lut_dist
 
 
 def _sqdist_rows(query: jax.Array, rows: jax.Array) -> jax.Array:
@@ -119,13 +120,16 @@ def resolve_gather_backend(backend: Optional[str] = None) -> Optional[str]:
 @functools.partial(
     jax.jit,
     static_argnames=("ef", "k", "max_iters", "mode", "gather_dist",
-                     "layout", "gather_backend"))
+                     "layout", "gather_backend", "dist_backend"))
 def beam_search(queries: jax.Array, db: jax.Array, neighbors: jax.Array,
                 entry_ids: jax.Array, *, ef: int, k: int,
                 max_iters: int = 0, mode: str = "while",
                 gather_dist: Optional[Callable] = None,
                 layout: str = "vmap",
-                gather_backend: Optional[str] = None):
+                gather_backend: Optional[str] = None,
+                dist_backend: str = "f32",
+                codes: Optional[jax.Array] = None,
+                lut: Optional[jax.Array] = None):
     """Batched graph search.
 
     queries: (Q, D); db: (N, D); neighbors: (N, R) int32 (-1 padded);
@@ -139,13 +143,25 @@ def beam_search(queries: jax.Array, db: jax.Array, neighbors: jax.Array,
     layout-parity jnp path elsewhere). A custom ``gather_dist`` callable
     takes (D,),(N,D),(R,) under "vmap" and (Q,D),(N,D),(Q,R) under
     "batched".
+
+    ``dist_backend="pq"|"int8"`` traverses over quantized codes instead of
+    ``db``: pass the codec's ``codes`` (N, M) uint8 and per-query ``lut``
+    (Q, M, C) f32 and every hop becomes one ``kernels/lut_dist`` call —
+    R rows of M bytes instead of R rows of D*4. Only the batched layout
+    supports it (the hot path); returned distances are then approximate
+    ADC values, which the caller reranks exactly (``Index.search``).
     """
     max_iters = max_iters or 4 * ef
+    if dist_backend != "f32" and layout != "batched":
+        raise ValueError(
+            f"dist_backend={dist_backend!r} requires layout='batched' "
+            f"(the quantized hot path), got layout={layout!r}")
     if layout == "batched":
         return _beam_search_batched(
             queries, db, neighbors, entry_ids, ef=ef, k=k,
             max_iters=max_iters, mode=mode, gather_dist=gather_dist,
-            gather_backend=gather_backend)
+            gather_backend=gather_backend, dist_backend=dist_backend,
+            codes=codes, lut=lut)
     if layout != "vmap":
         raise ValueError(f"bad layout {layout!r}")
     if gather_dist is None:
@@ -182,8 +198,17 @@ def beam_search(queries: jax.Array, db: jax.Array, neighbors: jax.Array,
 
 
 def _beam_search_batched(queries, db, neighbors, entry_ids, *, ef, k,
-                         max_iters, mode, gather_dist, gather_backend):
-    if gather_dist is not None:
+                         max_iters, mode, gather_dist, gather_backend,
+                         dist_backend="f32", codes=None, lut=None):
+    if dist_backend != "f32":
+        if codes is None or lut is None:
+            raise ValueError(
+                f"dist_backend={dist_backend!r} needs codes and lut "
+                f"(encode the db with a core.quant codec first)")
+        backend = resolve_gather_backend(gather_backend) or "jnp"
+        gd = lambda q, db_, ids: _kernel_lut_dist(lut, codes, ids,
+                                                  backend=backend)
+    elif gather_dist is not None:
         gd = gather_dist
     else:
         backend = resolve_gather_backend(gather_backend)

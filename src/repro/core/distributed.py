@@ -324,11 +324,15 @@ class ShardedFactoryIndex:
 
     def __init__(self, spec: str, n_shards: int = 2,
                  knn_backend: Optional[str] = None,
-                 finish_backend: Optional[str] = None):
+                 finish_backend: Optional[str] = None,
+                 dist_backend: Optional[str] = None,
+                 rerank: Optional[int] = None):
         self.spec = spec
         self.n_shards = n_shards
         self.knn_backend = knn_backend         # per-shard build override
         self.finish_backend = finish_backend   # per-shard finish override
+        self.dist_backend = dist_backend       # per-shard serving precision
+        self.rerank = rerank                   # per-shard exact-rerank depth
         self.subs: list = []
         # the max-degree shards fit() built: reprune always derives from
         # these (NOT from self.subs, which on a derived index are already
@@ -355,7 +359,9 @@ class ShardedFactoryIndex:
             build_index(inner_spec, data[bounds[i]:bounds[i + 1]],
                         key=jax.random.fold_in(key, i),
                         knn_backend=self.knn_backend,
-                        finish_backend=self.finish_backend)
+                        finish_backend=self.finish_backend,
+                        dist_backend=self.dist_backend,
+                        rerank=self.rerank)
             for i in range(self.n_shards)
         ]
         self._structural_subs = self.subs

@@ -56,15 +56,21 @@ class SearchParams:
     refit.
 
     Which index reads what:
-      * ``ef_search`` — beam width: HNSW, NSG/TunedGraph
-      * ``nprobe``    — probed inverted lists: IVF, IVF-PQ
-      * ``mode``      — graph traversal loop form ("while" | "fori")
-      * ``chunk``     — brute-force streaming block: Flat
+      * ``ef_search``    — beam width: HNSW, NSG/TunedGraph
+      * ``nprobe``       — probed inverted lists: IVF, IVF-PQ
+      * ``mode``         — graph traversal loop form ("while" | "fori")
+      * ``chunk``        — brute-force streaming block: Flat
+      * ``rerank``       — exact-rescore depth of the quantized beam tail:
+                           NSG/TunedGraph with a ``core.quant`` codec
+      * ``dist_backend`` — traversal precision ("f32" | "pq" | "int8"):
+                           NSG/TunedGraph
     """
     ef_search: Optional[int] = None
     nprobe: Optional[int] = None
     mode: Optional[str] = None
     chunk: Optional[int] = None
+    rerank: Optional[int] = None
+    dist_backend: Optional[str] = None
 
     def resolve(self, name: str, default):
         v = getattr(self, name)
@@ -76,7 +82,8 @@ class SearchParams:
 # hashable static structure (a params change recompiles, never retraces).
 jax.tree_util.register_dataclass(
     SearchParams, data_fields=[],
-    meta_fields=["ef_search", "nprobe", "mode", "chunk"])
+    meta_fields=["ef_search", "nprobe", "mode", "chunk", "rerank",
+                 "dist_backend"])
 
 
 def param_or(params: Optional[SearchParams], name: str, default):
@@ -94,6 +101,19 @@ def ef_search_space(low: int = 16, high: int = 256) -> "SearchSpace":
     """Beam-width fragment shared by the graph indexes (HNSW, NSG, sharded)."""
     from repro.core.tuning.space import Int, SearchSpace
     return SearchSpace().add("ef_search", Int(low, high, log=True))
+
+
+def rerank_space(space: Optional["SearchSpace"] = None, low: int = 8,
+                 high: int = 128) -> "SearchSpace":
+    """Exact-rerank-depth fragment for quantized-traversal indexes.
+
+    Pass an existing fragment (e.g. ``ef_search_space()``) to extend it, so
+    the tuner drives beam width and rerank depth jointly (the ScaNN-style
+    joint optimization the quantized path exists for).
+    """
+    from repro.core.tuning.space import Int, SearchSpace
+    space = space if space is not None else SearchSpace()
+    return space.add("rerank", Int(low, high, log=True))
 
 
 def nprobe_space(n_lists: int) -> "SearchSpace":
@@ -237,21 +257,27 @@ def parse_spec(spec: str, dim: int) -> Tuple[Optional[int], Any]:
 def build_index(spec: str, data: jax.Array, *,
                 key: Optional[jax.Array] = None,
                 knn_backend: Optional[str] = None,
-                finish_backend: Optional[str] = None) -> Index:
+                finish_backend: Optional[str] = None,
+                dist_backend: Optional[str] = None,
+                rerank: Optional[int] = None) -> Index:
     """Build + fit an index from a factory string (the one-call entry point).
 
     ``knn_backend`` overrides the build-time kNN-graph backend ("exact" |
     "nndescent" | "auto") for families that build one (NSG); the spec's own
     ``,ND<K>`` suffix is the in-grammar equivalent. ``finish_backend``
     overrides the NSG finishing pass ("host" | "device" | "auto",
-    ``core/build/finish.py``) the same way.
+    ``core/build/finish.py``) the same way. ``dist_backend`` ("f32" | "pq" |
+    "int8") and ``rerank`` override the quantized-traversal serving knobs
+    (in-grammar: ``,PQ<m>x8`` / ``,SQ8`` / ``,Rerank<k>``).
 
     >>> idx = build_index("PCA16,IVF64", data)
     >>> dists, ids = idx.search(queries, 10, SearchParams(nprobe=4))
     """
     pca_dim, index = parse_spec(spec, data.shape[1])
     overrides = {k: v for k, v in (("knn_backend", knn_backend),
-                                   ("finish_backend", finish_backend))
+                                   ("finish_backend", finish_backend),
+                                   ("dist_backend", dist_backend),
+                                   ("rerank", rerank))
                  if v is not None}
     if overrides:
         from dataclasses import replace as _replace
@@ -380,18 +406,23 @@ def _ensure_builtins():
 
     @register_index(
         "NSG", r"^NSG(\d+)?(?:a(\d+(?:\.\d+)?))?$",
-        "NSG[<degree>][a<alpha>][,AH<keep>][,EP<k>][,ND<K>]",
+        "NSG[<degree>][a<alpha>][,AH<keep>][,EP<k>][,ND<K>]"
+        "[,PQ<m>x8|,SQ8][,Rerank<k>]",
         examples=("NSG12", "NSG12,EP8", "NSG12,AH0.9,EP8",
-                  "NSG12a1.2,ND16"))
+                  "NSG12a1.2,ND16", "NSG12,PQ8x8,Rerank32",
+                  "NSG12,EP8,SQ8,Rerank32"))
     def _nsg(m, rest, dim):
         degree = int(m.group(1)) if m.group(1) else 32
         alpha = float(m.group(2)) if m.group(2) else 1.0
         ep, keep, used = 1, 1.0, 0
         backend, knn_k = "auto", None
+        dist_backend, pq_m, rerank = "f32", 0, 64
         for tok in rest:
             em = re.match(r"^EP(\d+)$", tok)
             ah = re.match(r"^AH(0\.\d+|1(?:\.0+)?)$", tok)
             nd = re.match(r"^ND(\d+)?$", tok)
+            pq = re.match(r"^PQ(\d+)x8$", tok)
+            rr = re.match(r"^Rerank(\d+)$", tok)
             if em:
                 ep = int(em.group(1))
             elif ah:
@@ -400,6 +431,12 @@ def _ensure_builtins():
                 backend = "nndescent"
                 if nd.group(1):
                     knn_k = int(nd.group(1))
+            elif pq:
+                dist_backend, pq_m = "pq", int(pq.group(1))
+            elif tok == "SQ8":
+                dist_backend = "int8"
+            elif rr:
+                rerank = int(rr.group(1))
             else:
                 break
             used += 1
@@ -407,7 +444,8 @@ def _ensure_builtins():
             pca_dim=dim, antihub_keep=keep, ep_clusters=ep,
             graph_degree=degree, alpha=alpha,
             build_knn_k=knn_k if knn_k is not None else degree,
-            build_candidates=max(2 * degree, 48), knn_backend=backend)
+            build_candidates=max(2 * degree, 48), knn_backend=backend,
+            dist_backend=dist_backend, pq_m=pq_m, rerank=rerank)
         return TunedGraphIndex(params), used
 
     # only flag success: a failure above must surface again on retry, not

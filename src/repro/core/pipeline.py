@@ -7,6 +7,7 @@ D (pca_dim), alpha (antihub_keep), k (ep_clusters) + ef_search.
 from __future__ import annotations
 
 import copy
+import functools
 import time
 from dataclasses import dataclass, replace
 from typing import Optional
@@ -16,12 +17,14 @@ import jax.numpy as jnp
 
 from repro.configs.base import ANNConfig
 from repro.core import antihub as antihub_mod
-from repro.core.beam_search import beam_search
+from repro.core.beam_search import beam_search, resolve_gather_backend
 from repro.core.build import build_knn, reprune_nsg, resolve_backend
 from repro.core.build.nn_descent import nn_descent
 from repro.core.entry_points import EntryPointSelector, fit_entry_points
 from repro.core.nsg import NSGGraph, build_nsg
 from repro.core.pca import PCA, fit_pca
+from repro.core.quant import make_codec
+from repro.kernels.gather_dist import gather_dist as _gather_dist
 
 # Module-level structural-build counter: every TunedGraphIndex.fit (a real
 # graph build: pools + prune + interconnect) increments it. Rebuild-free
@@ -68,6 +71,14 @@ class IndexParams:
     # "auto" resolves to), "host" keeps the original numpy path as the
     # parity baseline. Also selects the repair path under reprune().
     finish_backend: str = "auto"
+    # Quantized-traversal serving (core/quant): "f32" traverses the
+    # full-precision vectors; "pq" | "int8" traverses uint8 codes via
+    # kernels/lut_dist and exact-reranks the top ``rerank`` beam survivors.
+    # pq_m=0 auto-picks the largest divisor of the post-PCA dim <= dim/2.
+    # rerank=0 skips the exact tail (pure ADC distances come back).
+    dist_backend: str = "f32"
+    pq_m: int = 0
+    rerank: int = 64
 
     @staticmethod
     def from_config(cfg: ANNConfig) -> "IndexParams":
@@ -79,7 +90,10 @@ class IndexParams:
             alpha=getattr(cfg, "prune_alpha", 1.0),
             knn_backend=getattr(cfg, "knn_backend", "auto"),
             pools_backend=getattr(cfg, "pools_backend", "auto"),
-            finish_backend=getattr(cfg, "finish_backend", "auto"))
+            finish_backend=getattr(cfg, "finish_backend", "auto"),
+            dist_backend=getattr(cfg, "dist_backend", "f32"),
+            pq_m=getattr(cfg, "pq_m", 0),
+            rerank=getattr(cfg, "rerank", 64))
 
 
 class TunedGraphIndex:
@@ -95,6 +109,9 @@ class TunedGraphIndex:
         self.build_seconds: float = 0.0
         self.input_dim: int = 0
         self.knn_ids: Optional[jax.Array] = None     # build-time kNN table
+        self.codec = None                            # core.quant codec
+        self.codes: Optional[jax.Array] = None       # (N, M) uint8 db codes
+        self.codec_backend: Optional[str] = None     # "pq" | "int8"
 
     # -- build ------------------------------------------------------------
     def fit(self, data: jax.Array, key: Optional[jax.Array] = None, *,
@@ -169,8 +186,36 @@ class TunedGraphIndex:
                                knn_dists=knn_dists,
                                finish_backend=p.finish_backend)
         self.eps = fit_entry_points(key, base, p.ep_clusters)
+        if p.dist_backend != "f32":
+            self.quantize(key=jax.random.fold_in(key, 29))
         self.build_seconds = time.perf_counter() - t0
         _N_STRUCTURAL_BUILDS += 1
+        return self
+
+    def quantize(self, dist_backend: Optional[str] = None,
+                 pq_m: Optional[int] = None, *,
+                 key: Optional[jax.Array] = None) -> "TunedGraphIndex":
+        """Train a traversal codec on the projected base and encode it ONCE.
+
+        Codes live beside the graph; ``with_graph``/``reprune`` derivations
+        share them (a reprune changes edges, not vectors), so quantization
+        is per *structural build* — tuner sweeps over alpha/degree/rerank
+        never re-encode. Called automatically by ``fit`` when
+        ``params.dist_backend != "f32"``; call explicitly to quantize an
+        f32-built index after the fact.
+        """
+        assert self.base is not None, "fit() first"
+        p = self.params
+        backend = dist_backend or (
+            p.dist_backend if p.dist_backend != "f32" else "pq")
+        m = pq_m if pq_m is not None else p.pq_m
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.codec = make_codec(backend, self.base.shape[1], m)
+        self.codec.fit(self.base, key=key)
+        stored = getattr(self.codec, "codes", None)   # PQ keeps train codes
+        self.codes = stored if stored is not None \
+            else self.codec.encode(self.base)
+        self.codec_backend = backend
         return self
 
     # -- rebuild-free derivation ("prune, don't rebuild") ------------------
@@ -209,25 +254,55 @@ class TunedGraphIndex:
         return self.pca.transform(queries) if self.pca is not None else queries
 
     def search(self, queries: jax.Array, k: int, params=None, *,
-               ef: Optional[int] = None, mode: Optional[str] = None):
+               ef: Optional[int] = None, mode: Optional[str] = None,
+               rerank: Optional[int] = None,
+               dist_backend: Optional[str] = None):
         """Returns (dists (Q,k) in projected space, original ids (Q,k)).
 
-        ``params`` is a ``core.index_api.SearchParams``; explicit ``ef=`` /
-        ``mode=`` keywords win over it, both fall back to fit-time defaults.
+        ``params`` is a ``core.index_api.SearchParams``; explicit keywords
+        win over it, both fall back to fit-time defaults. Under
+        ``dist_backend="pq"|"int8"`` the beam traverses the codec's uint8
+        codes (one ``kernels/lut_dist`` call per hop) and the top
+        ``rerank`` survivors are exactly rescored in f32 — the returned
+        distances are exact for reranked entries, ADC approximations when
+        ``rerank=0``.
         """
         assert self.graph is not None, "fit() first"
         if params is not None:
             ef = ef if ef is not None else params.ef_search
             mode = mode if mode is not None else params.mode
+            if rerank is None:
+                rerank = getattr(params, "rerank", None)
+            if dist_backend is None:
+                dist_backend = getattr(params, "dist_backend", None)
         ef = ef or self.params.ef_search
         mode = mode or "while"
+        dist_backend = dist_backend or self.params.dist_backend
+        rerank = rerank if rerank is not None else self.params.rerank
         q = self.project(queries)
         entries = self.eps.select(q)
-        # batch-major layout: every hop is one (Q, R) gather_dist block
-        # (Pallas kernel on TPU) — exact-parity with the vmap layout.
-        d, i, hops = beam_search(q, self.base, self.graph.neighbors, entries,
-                                 ef=max(ef, k), k=k, mode=mode,
-                                 layout="batched")
+        if dist_backend == "f32":
+            # batch-major layout: every hop is one (Q, R) gather_dist block
+            # (Pallas kernel on TPU) — exact-parity with the vmap layout.
+            d, i, hops = beam_search(q, self.base, self.graph.neighbors,
+                                     entries, ef=max(ef, k), k=k, mode=mode,
+                                     layout="batched")
+        else:
+            if self.codec is None or self.codec_backend != dist_backend:
+                self.quantize(dist_backend)
+            lut = self.codec.lut(q)
+            # keep enough ADC-ranked survivors for the exact tail to pick
+            # a true top-k from
+            kb = min(max(rerank, k), max(ef, k))
+            d, i, hops = beam_search(q, self.base, self.graph.neighbors,
+                                     entries, ef=max(ef, k), k=kb, mode=mode,
+                                     layout="batched",
+                                     dist_backend=dist_backend,
+                                     codes=self.codes, lut=lut)
+            if rerank > 0:
+                d, i = _exact_rerank(q, self.base, i, k)
+            else:
+                d, i = d[:, :k], i[:, :k]
         orig = jnp.where(i >= 0, self.kept_idx[jnp.maximum(i, 0)], -1)
         return d, orig
 
@@ -241,18 +316,41 @@ class TunedGraphIndex:
         return self.input_dim
 
     def search_params_space(self):
-        from repro.core.index_api import ef_search_space
-        return ef_search_space()
+        from repro.core.index_api import ef_search_space, rerank_space
+        space = ef_search_space()
+        if self.params.dist_backend != "f32" or self.codec is not None:
+            space = rerank_space(space)
+        return space
 
     def memory_bytes(self) -> int:
-        """Index footprint: vectors + graph + entry-point structures."""
+        """Index footprint: vectors + graph + entry-point structures +
+        quantized codes/codebooks (when a codec is attached)."""
         total = self.base.size * self.base.dtype.itemsize
         total += self.graph.neighbors.size * 4
         total += self.kept_idx.size * 4
         if self.pca is not None:
             total += (self.pca.components.size + self.pca.mean.size) * 4
         total += (self.eps.centroids.size * 4 + self.eps.member_ids.size * 4)
+        if self.codes is not None:
+            total += self.codes.size * self.codes.dtype.itemsize
+        if self.codec is not None:
+            total += self.codec.memory_bytes()
         return int(total)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _exact_rerank(queries: jax.Array, base: jax.Array, ids: jax.Array,
+                  k: int):
+    """Exact f32 squared-L2 rescoring of the (Q, R') beam survivors -> top-k.
+
+    One gather_dist block over the survivor ids (Pallas on TPU, jnp ref
+    elsewhere — the same dispatch the f32 hop uses), then a top-k re-sort.
+    Padded ids (-1) carry +inf and sort last.
+    """
+    backend = resolve_gather_backend(None) or "jnp"
+    d = _gather_dist(queries, base, ids, backend=backend)
+    neg, pos = jax.lax.top_k(-d, k)
+    return -neg, jnp.take_along_axis(ids, pos, axis=1)
 
 
 def build_vanilla_nsg(data: jax.Array, *, degree: int = 32,

@@ -4,6 +4,10 @@ M sub-quantizers of 256 centroids each; search is asymmetric distance
 computation (ADC): per-query LUT of (M, 256) sub-distances, then a gather-sum
 over the code matrix. The paper notes PQ's QPS/memory are good but recall
 (without re-ranking) can't reach 0.9 — our benchmark reproduces exactly that.
+
+The codebook training and LUT arithmetic live in ``core.quant.PQCodec`` (the
+quantized-traversal codec) — this module is the exhaustive-ADC-scan *index*
+over that one PQ implementation, kept as the paper-figure baseline.
 """
 from __future__ import annotations
 
@@ -13,32 +17,34 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.kmeans import kmeans
+from repro.core.quant import PQCodec, pq_lut
 
 
 class PQIndex:
     def __init__(self, m: int = 32, n_centroids: int = 256):
-        self.m = m
-        self.n_centroids = n_centroids
-        self.codebooks: Optional[jax.Array] = None   # (M, 256, dsub)
-        self.codes: Optional[jax.Array] = None       # (N, M) uint8
+        self.codec = PQCodec(m, n_centroids)
 
     def fit(self, data: jax.Array, *, key: Optional[jax.Array] = None,
             iters: int = 8):
-        key = key if key is not None else jax.random.PRNGKey(0)
-        n, d = data.shape
-        assert d % self.m == 0, (d, self.m)
-        dsub = d // self.m
-        sub = data.reshape(n, self.m, dsub)
-        books, codes = [], []
-        for j in range(self.m):
-            km = kmeans(jax.random.fold_in(key, j), sub[:, j],
-                        min(self.n_centroids, n), iters=iters)
-            books.append(km.centroids)
-            codes.append(km.assignments.astype(jnp.int32))
-        self.codebooks = jnp.stack(books)
-        self.codes = jnp.stack(codes, axis=1)
+        self.codec.fit(data, key=key, iters=iters)
         return self
+
+    # codebooks/codes are the codec's (IVF-PQ composes on these too)
+    @property
+    def m(self) -> int:
+        return self.codec.m
+
+    @property
+    def n_centroids(self) -> int:
+        return self.codec.n_centroids
+
+    @property
+    def codebooks(self) -> Optional[jax.Array]:
+        return self.codec.codebooks
+
+    @property
+    def codes(self) -> Optional[jax.Array]:
+        return self.codec.codes
 
     def search(self, queries: jax.Array, k: int, params=None):
         return _pq_search(queries, self.codebooks, self.codes, k)
@@ -63,17 +69,12 @@ class PQIndex:
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def _pq_search(queries, codebooks, codes, k: int):
-    qn, d = queries.shape
-    m, c, dsub = codebooks.shape
-    qsub = queries.reshape(qn, m, dsub).astype(jnp.float32)
-    # LUT: (Q, M, C) sub-distances
-    diff = qsub[:, :, None, :] - codebooks[None].astype(jnp.float32)
-    lut = jnp.sum(diff * diff, axis=-1)
+    lut = pq_lut(queries, codebooks)                  # (Q, M, C)
     # ADC: sum LUT entries along codes -> (Q, N)
     dist = jnp.sum(
         jnp.take_along_axis(
             lut[:, None, :, :],                       # (Q, 1, M, C)
-            codes[None, :, :, None],                  # (1, N, M, 1)
+            codes.astype(jnp.int32)[None, :, :, None],  # (1, N, M, 1)
             axis=3)[..., 0], axis=2)
     nd, ids = jax.lax.top_k(-dist, k)
     return -nd, ids

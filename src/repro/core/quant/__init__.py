@@ -1,0 +1,20 @@
+"""Quantized traversal codecs (PQ / scalar int8) for the serving hot path."""
+from repro.core.quant.codec import (
+    Codec,
+    Int8Codec,
+    PQCodec,
+    default_pq_m,
+    make_codec,
+    pq_decode,
+    pq_lut,
+)
+
+__all__ = [
+    "Codec",
+    "Int8Codec",
+    "PQCodec",
+    "default_pq_m",
+    "make_codec",
+    "pq_decode",
+    "pq_lut",
+]

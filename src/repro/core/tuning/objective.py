@@ -39,7 +39,8 @@ from repro.core.entry_points import fit_entry_points
 from repro.core.flat import FlatIndex, recall_at_k
 from repro.core.index_api import Index, SearchParams, build_index
 from repro.core.pipeline import IndexParams, TunedGraphIndex
-from repro.core.tuning.space import Float, Int, SearchSpace
+from repro.core.quant import make_codec
+from repro.core.tuning.space import Categorical, Float, Int, SearchSpace
 from repro.core.tuning.study import Trial
 
 
@@ -55,20 +56,34 @@ def snap_alpha(grid: Tuple[float, ...], alpha: float) -> Tuple[int, float]:
     return i, grid[i]
 
 
-def default_space(dim: int, n: int, max_degree: int = 32) -> SearchSpace:
+def default_space(dim: int, n: int, max_degree: int = 32,
+                  quantized: bool = False) -> SearchSpace:
     """The paper's knobs (D, alpha, k, ef) + the two rebuild-free graph
     knobs the reprune path makes cheap (graph_degree, pruning alpha).
 
     ``max_degree`` must match the objective's structural ceiling (its base
     ``graph_degree``); sampled degrees above it are clamped.
+
+    ``quantized=True`` adds the serving-precision knobs the quantized
+    traversal path makes cheap per structural build (codes are trained and
+    encoded once per structure, then shared across every reprune trial):
+    ``dist_backend`` picks the code-size class (pq ~= d'/2 bytes/vector,
+    int8 = d' bytes, vs f32's 4*d') and ``rerank`` the exact-rescore depth.
+    Fine-grained PQ code size rides on ``pca_dim`` — ``pq_m`` auto-tracks
+    the projected dimensionality (core.quant.default_pq_m).
     """
-    return (SearchSpace()
-            .add("pca_dim", Int(max(8, dim // 4), dim))
-            .add("antihub_keep", Float(0.7, 1.0))
-            .add("graph_degree", Int(max(4, max_degree // 4), max_degree))
-            .add("alpha", Float(1.0, 1.4))
-            .add("ep_clusters", Int(1, max(2, min(256, n // 20)), log=True))
-            .add("ef_search", Int(16, 256, log=True)))
+    space = (SearchSpace()
+             .add("pca_dim", Int(max(8, dim // 4), dim))
+             .add("antihub_keep", Float(0.7, 1.0))
+             .add("graph_degree", Int(max(4, max_degree // 4), max_degree))
+             .add("alpha", Float(1.0, 1.4))
+             .add("ep_clusters", Int(1, max(2, min(256, n // 20)), log=True))
+             .add("ef_search", Int(16, 256, log=True)))
+    if quantized:
+        space = (space
+                 .add("dist_backend", Categorical(("f32", "pq", "int8")))
+                 .add("rerank", Int(8, 128, log=True)))
+    return space
 
 
 @dataclass
@@ -113,6 +128,10 @@ class AnnObjective:
         self._family_cache: Dict[tuple, object] = {}   # skey -> RepruneFamily
         self._graph_cache: Dict[tuple, object] = {}
         self._ep_cache: Dict[tuple, object] = {}
+        # skey + (dist_backend, pq_m) -> (codec, codes): one codec training
+        # + encode per structure/backend; reprune trials share the codes
+        # (a reprune changes edges, never vectors)
+        self._codec_cache: Dict[tuple, tuple] = {}
         self._antihub_ids = None
         self.eval_log: list = []
         self.grid_hits = 0         # repruned trials served by a grid lookup
@@ -144,8 +163,12 @@ class AnnObjective:
             full = self._build_cache[skey]
             cached = True
         else:
+            # structural builds are always f32: codecs are trained lazily
+            # per (structure, dist_backend, pq_m) below and attached to
+            # the derived serving copies, never baked into the cache
             structural = replace(p, ep_clusters=1, alpha=1.0,
-                                 graph_degree=self.max_degree)
+                                 graph_degree=self.max_degree,
+                                 dist_backend="f32")
             ah_ids = (self._antihub_knn_ids(p)
                       if p.antihub_keep < 1.0 else None)
             full = TunedGraphIndex(structural).fit(
@@ -185,6 +208,19 @@ class AnnObjective:
             self._ep_cache[ekey] = fit_entry_points(
                 self.key, idx.base, p.ep_clusters)
         idx.eps = self._ep_cache[ekey]
+
+        if p.dist_backend != "f32":
+            ckey = skey + (p.dist_backend, p.pq_m)
+            if ckey not in self._codec_cache:
+                codec = make_codec(p.dist_backend, full.base.shape[1],
+                                   p.pq_m)
+                codec.fit(full.base, key=self.key)
+                codes = getattr(codec, "codes", None)
+                if codes is None:
+                    codes = codec.encode(full.base)
+                self._codec_cache[ckey] = (codec, codes)
+            idx.codec, idx.codes = self._codec_cache[ckey]
+            idx.codec_backend = p.dist_backend
         return idx, cached, repruned
 
     def evaluate(self, params: Dict) -> EvalResult:
@@ -207,12 +243,13 @@ class AnnObjective:
         idx, cached, repruned = self._get_index(p)
         build_s = time.perf_counter() - t0
         ef = max(p.ef_search, self.k)
-        d, i = idx.search(self.queries, self.k, ef=ef)      # warmup+compile
+        kw = dict(ef=ef, dist_backend=p.dist_backend, rerank=p.rerank)
+        d, i = idx.search(self.queries, self.k, **kw)       # warmup+compile
         jax.block_until_ready(d)
         times = []
         for _ in range(self.qps_repeats):
             t1 = time.perf_counter()
-            d, i = idx.search(self.queries, self.k, ef=ef)
+            d, i = idx.search(self.queries, self.k, **kw)
             jax.block_until_ready(d)
             times.append(time.perf_counter() - t1)
         qps = self.queries.shape[0] / float(np.median(times))

@@ -1,0 +1,1 @@
+from repro.kernels.lut_dist.ops import lut_dist  # noqa: F401

@@ -1,0 +1,75 @@
+"""Scalar-prefetch code-gather + LUT accumulation Pallas TPU kernel.
+
+The quantized twin of ``kernels/gather_dist``: the beam hop scores R
+neighbors per query, but instead of streaming R f32 rows of D*4 bytes it
+streams R uint8 code rows of M bytes and accumulates the per-query LUT —
+the ADC inner loop of PQ/SQ8 traversal (VSAG/ScaNN-style). Neighbor ids
+are scalar-prefetched (`pltpu.PrefetchScalarGridSpec`) so BlockSpec
+index_maps drive the DMA gather of exactly the R needed code rows, while
+the per-query LUT block stays resident across the R inner steps.
+
+The LUT entry pick is expressed as a one-hot select over the C axis
+(iota == code), not an in-kernel gather: dynamic gathers don't vectorize
+on the VPU, whereas select+reduce does — and summing one LUT value with
+C-1 zeros is exact in f32, keeping the kernel bit-identical to the ref.
+
+Grid: (Q, R) — one gathered code row per step; rows pipeline across steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+
+
+def _lut_dist_kernel(ids_ref, lut_ref, row_ref, out_ref):
+    r = pl.program_id(1)
+    m, c = lut_ref.shape[1], lut_ref.shape[2]
+    code = row_ref[...].reshape(m, 1).astype(jnp.int32)        # (M, 1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (m, c), 1)
+    sel = jnp.where(iota == code, lut_ref[0], 0.0)             # (M, C)
+    per_m = jnp.sum(sel, axis=1)   # exact: one LUT value + C-1 zeros per m
+    # unrolled left-to-right accumulation over the (static, small) M axis —
+    # the same order XLA's minor-axis reduce gives the jnp ref, keeping the
+    # kernel bit-identical to it
+    acc = per_m[0]
+    for mm in range(1, m):
+        acc = acc + per_m[mm]
+    out_ref[0, r] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lut_dist_pallas(lut: jax.Array, codes: jax.Array, ids: jax.Array,
+                    interpret: bool = True) -> jax.Array:
+    """lut (Q, M, C) f32, codes (N, M) uint8, ids (Q, R) int32 -> (Q, R).
+
+    Negative ids are clamped to row 0 and masked to +inf outside the kernel
+    (matching beam_search's padding convention).
+    """
+    q, m, c = lut.shape
+    r = ids.shape[1]
+    safe = jnp.maximum(ids, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q, r),
+        in_specs=[
+            pl.BlockSpec((1, m, c), lambda i, j, ids_ref: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i, j, ids_ref: (ids_ref[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r), lambda i, j, ids_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _lut_dist_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((q, r), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(safe, lut, codes)
+    return jnp.where(ids >= 0, out, jnp.inf)

@@ -53,6 +53,15 @@ def main():
                     help="override the NSG finishing pass for graph specs "
                          "(ann family only): device jitted interconnect + "
                          "repair, or the host numpy parity path")
+    ap.add_argument("--dist-backend", default=None,
+                    choices=["f32", "pq", "int8"],
+                    help="quantized-traversal serving for graph specs (ann "
+                         "family only): traverse uint8 codes + exact-rerank "
+                         "the beam tail; the spec's ,PQ<m>x8 / ,SQ8 suffix "
+                         "is the in-grammar equivalent")
+    ap.add_argument("--rerank", type=int, default=None,
+                    help="exact-rerank depth of the quantized beam tail "
+                         "(ann family only); ,Rerank<k> in-grammar")
     args = ap.parse_args()
     spec = get_arch(args.arch)
     cfg = spec.smoke_config
@@ -96,7 +105,9 @@ def main():
         queries = queries_like(jax.random.PRNGKey(1), data, args.batch * 16)
         idx = build_index(args.spec, data, key=key,
                           knn_backend=args.knn_backend,
-                          finish_backend=args.finish_backend)
+                          finish_backend=args.finish_backend,
+                          dist_backend=args.dist_backend,
+                          rerank=args.rerank)
         if args.buckets == "off":
             buckets = None
         elif args.buckets == "auto":

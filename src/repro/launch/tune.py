@@ -62,6 +62,15 @@ def main():
                     help="structural graph-degree ceiling: the single real "
                          "build per structure happens here; degree/alpha "
                          "trials reprune down from it")
+    ap.add_argument("--dist-backend", default=None,
+                    choices=["f32", "pq", "int8"],
+                    help="quantized-traversal serving (core.quant): with "
+                         "--spec, a per-shard/index build override; without "
+                         "it, adds dist_backend + rerank to the tuned space "
+                         "(codes encode once per structural build)")
+    ap.add_argument("--rerank", type=int, default=None,
+                    help="exact-rerank depth of the quantized beam tail "
+                         "(SearchParams.rerank / IndexParams.rerank)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -73,27 +82,43 @@ def main():
         b0 = structural_build_count()
         idx = ShardedFactoryIndex(args.spec, n_shards=args.shards,
                                   knn_backend=args.knn_backend,
-                                  finish_backend=args.finish_backend).fit(
+                                  finish_backend=args.finish_backend,
+                                  dist_backend=args.dist_backend,
+                                  rerank=args.rerank).fit(
             data, key=key)
         obj = ShardedRepruneObjective(idx, data, queries, k=10,
                                       recall_floor=args.recall_floor,
                                       qps_repeats=3)
         space = obj.space
     elif args.spec:
-        obj = SearchParamsObjective(args.spec, data, queries, k=10,
+        index = args.spec
+        if args.dist_backend is not None or args.rerank is not None:
+            from repro.core.index_api import build_index
+            index = build_index(args.spec, data, key=key,
+                                knn_backend=args.knn_backend,
+                                finish_backend=args.finish_backend,
+                                dist_backend=args.dist_backend,
+                                rerank=args.rerank)
+        obj = SearchParamsObjective(index, data, queries, k=10,
                                     recall_floor=args.recall_floor,
                                     qps_repeats=3, key=key)
         space = obj.space
     else:
+        quantized = (args.dist_backend is not None
+                     or args.rerank is not None)
         base = IndexParams(pca_dim=args.dim, graph_degree=args.max_degree,
                            build_knn_k=args.max_degree,
                            build_candidates=2 * args.max_degree,
                            ef_search=64, knn_backend=args.knn_backend,
-                           finish_backend=args.finish_backend)
+                           finish_backend=args.finish_backend,
+                           dist_backend=args.dist_backend or "f32",
+                           rerank=args.rerank if args.rerank is not None
+                           else 64)
         obj = AnnObjective(data, queries, k=10, base_params=base,
                            recall_floor=args.recall_floor, qps_repeats=3)
         space = default_space(args.dim, args.n,
-                              max_degree=args.max_degree)
+                              max_degree=args.max_degree,
+                              quantized=quantized)
 
     if args.mode == "single":
         study = Study(space, TPESampler(seed=0, n_startup=5))

@@ -39,6 +39,8 @@ def recall_floor(spec: str) -> float:
         return 0.55 if spec == "PCA24,Flat" else 0.50
     if spec == "Flat":
         return 0.999
+    if "Rerank" in spec:                    # quantized beam + exact tail
+        return 0.85                         # rerank recovers ADC's loss
     if "PQ" in spec:                        # quantization caps recall
         return 0.30
     if "AH" in spec:                        # subsampling drops true hits
