@@ -33,17 +33,24 @@ from repro.core.build.prune import (
     RepruneFamily, alpha_prune, alpha_prune_mask, mark_dups,
     nsg_from_neighbors, pairwise_rows_sqdist, prune_in_chunks, reprune,
     reprune_family, reprune_nsg, rows_sqdist_in_chunks, sorted_adjacency,
+    sorted_adjacency_chunk,
+)
+from repro.core.build.shardlocal import derive_local, repair_local
+from repro.core.build.stream import (
+    DEFAULT_CHUNK, HostOffloadStore, chunk_spans,
 )
 
 __all__ = [
-    "AUTO_NND_MIN_N", "BuildStats", "FINISH_BACKENDS", "FinishStats",
-    "RepruneFamily", "alpha_prune", "alpha_prune_mask", "build_knn",
+    "AUTO_NND_MIN_N", "BuildStats", "DEFAULT_CHUNK", "FINISH_BACKENDS",
+    "FinishStats", "HostOffloadStore", "RepruneFamily", "alpha_prune",
+    "alpha_prune_mask", "build_knn", "chunk_spans", "derive_local",
     "finish_nsg", "knn_graph_recall", "mark_dups", "nn_descent",
     "nnd_candidate_pools", "nsg_from_neighbors", "pairwise_rows_sqdist",
     "prune_in_chunks", "reachable_mask", "repair",
-    "repair_connectivity_device", "reprune", "reprune_family",
-    "reprune_nsg", "resolve_backend", "resolve_finish_backend",
-    "rows_sqdist_in_chunks", "sorted_adjacency",
+    "repair_connectivity_device", "repair_local", "reprune",
+    "reprune_family", "reprune_nsg", "resolve_backend",
+    "resolve_finish_backend", "rows_sqdist_in_chunks", "sorted_adjacency",
+    "sorted_adjacency_chunk",
 ]
 
 

@@ -145,9 +145,29 @@ def prune_in_chunks(data, node_ids, cand_ids, cand_dists, degree, chunk,
     return jnp.concatenate(outs)
 
 
+@jax.jit
+def sorted_adjacency_chunk(data: jax.Array, rows: jax.Array,
+                           neighbors: jax.Array):
+    """One row chunk's adjacency as distance-ascending pools (ids, dists).
+
+    ``rows`` are the chunk's own vectors (``data[s:e]``); the gather runs
+    against the full ``data``. The streaming building block: callers that
+    fuse sort + scan per chunk never hold more than a ``(chunk, R)`` f32
+    block, whatever N is.
+    """
+    d = pairwise_rows_sqdist(rows, data, neighbors)
+    order = jnp.argsort(d, axis=1, stable=True)
+    return (jnp.take_along_axis(neighbors, order, axis=1),
+            jnp.take_along_axis(d, order, axis=1))
+
+
 def sorted_adjacency(data: jax.Array, neighbors: jax.Array,
                      chunk: int = 2048):
-    """Adjacency rows as distance-ascending candidate pools (ids, dists)."""
+    """Adjacency rows as distance-ascending candidate pools (ids, dists).
+
+    Materializes the full (N, R) f32 table — the small-N/parity form.
+    Out-of-core callers stream ``sorted_adjacency_chunk`` instead.
+    """
     d = rows_sqdist_in_chunks(data, neighbors, chunk)
     order = jnp.argsort(d, axis=1, stable=True)
     return (jnp.take_along_axis(neighbors, order, axis=1),
@@ -163,13 +183,24 @@ def reprune(data: jax.Array, neighbors: jax.Array, *, alpha: float = 1.0,
     occlusion scan — orders of magnitude below a rebuild. With alpha=1 and
     degree=R the result is bit-identical to pruning the original candidate
     pools at degree R (the prefix property; tier-1 tested).
+
+    Streamed: each chunk's sort + occlusion scan runs fused, so the
+    per-structure (N, R) f32 distance table never materializes — the
+    float peak is (chunk, R) and the output is the (N, degree) int32
+    adjacency the caller needs anyway. Row-independent, hence
+    bit-identical to the materialized two-pass form.
     """
     n, rmax = neighbors.shape
     degree = rmax if degree is None else min(degree, rmax)
-    cand_i, cand_d = sorted_adjacency(data, neighbors, chunk)
     node_ids = jnp.arange(n, dtype=jnp.int32)
-    return prune_in_chunks(data, node_ids, cand_i, cand_d, degree, chunk,
-                           alpha)
+    outs = []
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        cand_i, cand_d = sorted_adjacency_chunk(data, data[s:e],
+                                                neighbors[s:e])
+        outs.append(alpha_prune(data, node_ids[s:e], cand_i, cand_d,
+                                degree, alpha))
+    return jnp.concatenate(outs)
 
 
 @jax.jit
@@ -266,26 +297,28 @@ def reprune_family(data: jax.Array, neighbors: jax.Array, alphas,
     the same arrays bit-identically on demand.
     """
     n, rmax = neighbors.shape
-    cand_i, cand_d = sorted_adjacency(data, neighbors, chunk)
     node_ids = jnp.arange(n, dtype=jnp.int32)
     al = jnp.asarray(alphas, jnp.float32)
-    outs = []
+    outs, cand_parts = [], []
+    # streamed like `reprune`: each chunk's sorted pools feed the vmapped
+    # alpha axis immediately, so the (N, R) f32 table never materializes
+    # — only the int32 adjacency (and, lean path, the packed masks)
     for s in range(0, n, chunk):
         e = min(s + chunk, n)
+        ci, cd = sorted_adjacency_chunk(data, data[s:e], neighbors[s:e])
+        cand_parts.append(ci)
         if materialize:
             outs.append(jax.vmap(
-                lambda a, s=s, e=e: alpha_prune(
-                    data, node_ids[s:e], cand_i[s:e], cand_d[s:e], rmax,
-                    a))(al))
+                lambda a, ci=ci, cd=cd, s=s, e=e: alpha_prune(
+                    data, node_ids[s:e], ci, cd, rmax, a))(al))
         else:
             outs.append(_pack_mask(jax.vmap(
-                lambda a, s=s, e=e: alpha_prune_mask(
-                    data, node_ids[s:e], cand_i[s:e], cand_d[s:e], rmax,
-                    a))(al)))
+                lambda a, ci=ci, cd=cd, s=s, e=e: alpha_prune_mask(
+                    data, node_ids[s:e], ci, cd, rmax, a))(al)))
     stacked = jnp.concatenate(outs, axis=1)
     if materialize:
         return stacked
-    return RepruneFamily(alphas, cand_i, stacked)
+    return RepruneFamily(alphas, jnp.concatenate(cand_parts), stacked)
 
 
 def nsg_from_neighbors(data: jax.Array, neighbors: jax.Array, medoid, *,

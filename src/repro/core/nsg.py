@@ -43,6 +43,7 @@ variants from a built graph with no rebuild.
 """
 from __future__ import annotations
 
+import time
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -78,6 +79,8 @@ class NSGBuildStats(NamedTuple):
     interconnect_seconds: float = 0.0   # phase-4 wall-clock (to ready)
     repair_seconds: float = 0.0         # phase-5 wall-clock (to ready)
     repair_rounds: int = 0              # attach rounds until reachable
+    pools_seconds: float = 0.0          # phase-2 wall-clock (to ready)
+    prune_seconds: float = 0.0          # phase-3 wall-clock (to ready)
 
 
 POOLS_BACKENDS = ("search", "nndescent", "auto")
@@ -172,6 +175,7 @@ def build_nsg(data: jax.Array, knn_ids: jax.Array, *, degree: int,
     _, medoid = nearest(mean, data)
     medoid = medoid[0].astype(jnp.int32)
 
+    t_pools = time.perf_counter()
     if resolved == "nndescent":
         if knn_dists is None:
             # explicit request without table dists: one O(N*K) gather pass
@@ -186,9 +190,16 @@ def build_nsg(data: jax.Array, knn_ids: jax.Array, *, degree: int,
     else:
         cand_i, cand_d, pool_evals = _candidate_pools(
             data, knn_ids, medoid, n_candidates, chunk, merge_backend)
+    if with_stats:
+        jax.block_until_ready(cand_d)   # to-ready, like the finish timings
+    t_prune = time.perf_counter()
+    pools_seconds = t_prune - t_pools
     node_ids = jnp.arange(n, dtype=jnp.int32)
     nbrs = prune_in_chunks(data, node_ids, cand_i, cand_d, degree, chunk,
                            alpha)
+    if with_stats:
+        jax.block_until_ready(nbrs)
+    prune_seconds = time.perf_counter() - t_prune
 
     # --- finishing pass: reverse interconnect + connectivity repair ---
     nbrs, fstats = finish_nsg(
@@ -212,5 +223,7 @@ def build_nsg(data: jax.Array, knn_ids: jax.Array, *, degree: int,
             finish_backend=fstats.backend,
             interconnect_seconds=fstats.interconnect_seconds,
             repair_seconds=fstats.repair_seconds,
-            repair_rounds=fstats.repair_rounds)
+            repair_rounds=fstats.repair_rounds,
+            pools_seconds=pools_seconds,
+            prune_seconds=prune_seconds)
     return graph

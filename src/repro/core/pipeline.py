@@ -107,6 +107,8 @@ class TunedGraphIndex:
         self.graph: Optional[NSGGraph] = None
         self.eps: Optional[EntryPointSelector] = None
         self.build_seconds: float = 0.0
+        self.knn_seconds: float = 0.0                # kNN-graph phase
+        self.build_stats = None                      # NSGBuildStats of fit
         self.input_dim: int = 0
         self.knn_ids: Optional[jax.Array] = None     # build-time kNN table
         self.codec = None                            # core.quant codec
@@ -150,6 +152,7 @@ class TunedGraphIndex:
             base = sub
         self.base = base
 
+        t_knn = time.perf_counter()
         resolved_knn = resolve_backend(p.knn_backend, base.shape[0])
         if (resolved_knn == "nndescent" and ah_ids is not None
                 and p.antihub_keep < 1.0):
@@ -174,17 +177,22 @@ class TunedGraphIndex:
                 base, p.build_knn_k, backend=p.knn_backend,
                 key=jax.random.fold_in(key, 23))
         self.knn_ids = knn_ids
+        jax.block_until_ready(knn_ids)
+        self.knn_seconds = time.perf_counter() - t_knn
 
         pools = p.pools_backend
         if pools == "auto":
             # table-derived pools whenever the kNN side is (or may be)
             # NN-Descent; explicit exact keeps the classic beam pools
             pools = "search" if p.knn_backend == "exact" else "nndescent"
-        self.graph = build_nsg(base, knn_ids, degree=p.graph_degree,
-                               n_candidates=p.build_candidates,
-                               alpha=p.alpha, pools_backend=pools,
-                               knn_dists=knn_dists,
-                               finish_backend=p.finish_backend)
+        # stats are retained unconditionally: the sharded build path and
+        # launch/tune --bench-build-out aggregate per-shard stage timings
+        # from them after the fact
+        self.graph, self.build_stats = build_nsg(
+            base, knn_ids, degree=p.graph_degree,
+            n_candidates=p.build_candidates,
+            alpha=p.alpha, pools_backend=pools, knn_dists=knn_dists,
+            finish_backend=p.finish_backend, with_stats=True)
         self.eps = fit_entry_points(key, base, p.ep_clusters)
         if p.dist_backend != "f32":
             self.quantize(key=jax.random.fold_in(key, 29))

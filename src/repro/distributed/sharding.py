@@ -17,6 +17,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 try:                                      # JAX >= 0.6: public top-level API
@@ -82,6 +83,32 @@ def put_row_sharded(mesh: Mesh, x, *trailing) -> jax.Array:
     the sharded-index fit AND its rebuild-free reprune path, so a derived
     neighbors table always lands exactly where the original did."""
     return jax.device_put(x, NamedSharding(mesh, P("model", *trailing)))
+
+
+def row_sharded_from_blocks(mesh: Mesh, blocks, *trailing) -> jax.Array:
+    """Assemble a `model`-row-sharded global from per-shard blocks — the
+    zero-host-concat placement path.
+
+    ``blocks[i]`` is shard i's equal-shape slab (device or host). Each is
+    ``device_put`` individually to every device in its `model` column
+    (replicated across the other mesh axes) and the global is stitched
+    with ``jax.make_array_from_single_device_arrays`` — at no point does a
+    ``(shards * m, ...)`` host array exist, so peak host memory for a
+    sharded fit is one shard, not N. The resulting array is
+    indistinguishable from ``put_row_sharded`` of the concatenation."""
+    s = mesh.shape["model"]
+    if len(blocks) != s:
+        raise ValueError(f"{len(blocks)} blocks for {s} `model` shards")
+    shapes = {tuple(b.shape) for b in blocks}
+    if len(shapes) > 1:
+        raise ValueError(f"blocks must be equal-shape, got {shapes}")
+    m = blocks[0].shape[0]
+    shape = (s * m,) + tuple(blocks[0].shape[1:])
+    sharding = NamedSharding(mesh, P("model", *trailing))
+    axis = mesh.axis_names.index("model")
+    shards = [jax.device_put(blocks[idx[axis]], dev)
+              for idx, dev in np.ndenumerate(mesh.devices)]
+    return jax.make_array_from_single_device_arrays(shape, sharding, shards)
 
 
 def active_dp_axes() -> Optional[Tuple[str, ...]]:

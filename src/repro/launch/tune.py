@@ -15,13 +15,28 @@ maximum and all degree/alpha trials are served by per-shard reprune —
 zero rebuilds, asserted by the structural-build counter in the log:
 
     PYTHONPATH=src python -m repro.launch.tune --spec "NSG16" --shards 4
+
+``--shards`` WITHOUT ``--spec`` shards the paper's full pipeline itself:
+an SPMD ``ShardedIndex`` when the backend has >= shards devices, the
+host-offload ``StreamedShardedIndex`` tier otherwise (shards stream
+through the device one at a time — N is bounded by host RAM, not HBM).
+``--bench-build-out BENCH_build.json`` appends the per-stage build
+timings (knn / pools / prune / finish / total, summed over shards) as a
+``stage="sharded_build"`` point — how the >= 1M build-scaling points are
+produced:
+
+    PYTHONPATH=src python -m repro.launch.tune --n 1000000 --dim 16 \
+        --shards 8 --bench-build-out BENCH_build.json --trials 3
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import time
 
 import jax
+import numpy as np
 
 from repro.core import FlatIndex, IndexParams
 from repro.core.tuning import (
@@ -29,6 +44,28 @@ from repro.core.tuning import (
     TPESampler, default_space,
 )
 from repro.data import clustered_vectors, queries_like
+
+
+def merge_bench_point(path: str, point: dict) -> None:
+    """Append one point to ``BENCH_build.json``-style artifacts in place.
+
+    Existing points for the same (stage, n, shards, path) are replaced —
+    re-running the bench updates its own row instead of accumulating
+    duplicates — and a missing/invalid file starts a fresh document.
+    """
+    doc = {"backend": jax.default_backend(), "points": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            pass
+    keyof = lambda p: (p.get("stage"), p.get("n"), p.get("shards"),
+                       p.get("path"))
+    doc["points"] = [p for p in doc.get("points", [])
+                     if keyof(p) != keyof(point)] + [point]
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=str)
 
 
 def main():
@@ -71,6 +108,17 @@ def main():
     ap.add_argument("--rerank", type=int, default=None,
                     help="exact-rerank depth of the quantized beam tail "
                          "(SearchParams.rerank / IndexParams.rerank)")
+    ap.add_argument("--offload", action="store_true",
+                    help="with --shards (no --spec): force the host-offload "
+                         "streamed tier even when the mesh has enough "
+                         "devices for the SPMD path")
+    ap.add_argument("--bench-build-out", default=None,
+                    help="with --shards (no --spec): merge a "
+                         "stage='sharded_build' per-stage timing point "
+                         "into this BENCH_build.json-style file")
+    ap.add_argument("--pca-dim", type=int, default=None,
+                    help="pipeline PCA target dim (default: --dim, i.e. "
+                         "projection off)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -102,6 +150,55 @@ def main():
         obj = SearchParamsObjective(index, data, queries, k=10,
                                     recall_floor=args.recall_floor,
                                     qps_repeats=3, key=key)
+        space = obj.space
+    elif args.shards > 1:
+        # paper pipeline, sharded: SPMD mesh when the backend has enough
+        # devices, host-offload streaming otherwise; either way ONE
+        # structural build per shard and reprune-derived trials
+        from jax.sharding import Mesh
+        from repro.core.distributed import (
+            ShardedIndex, StreamedShardedIndex,
+        )
+        from repro.core.pipeline import structural_build_count
+        b0 = structural_build_count()
+        p = IndexParams(
+            pca_dim=args.pca_dim or args.dim,
+            graph_degree=args.max_degree, build_knn_k=args.max_degree,
+            build_candidates=2 * args.max_degree, ef_search=64,
+            knn_backend=args.knn_backend,
+            finish_backend=args.finish_backend)
+        devs = jax.devices()
+        t0 = time.perf_counter()
+        if not args.offload and len(devs) >= args.shards:
+            mesh = Mesh(np.array(devs[:args.shards]).reshape(
+                1, args.shards), ("data", "model"))
+            idx = ShardedIndex(p, mesh).fit(data, key=key)
+            path_name = "spmd"
+        else:
+            idx = StreamedShardedIndex(p, n_shards=args.shards).fit(
+                data, key=key)
+            path_name = "streamed"
+        build_seconds = time.perf_counter() - t0
+        stats = idx.shard_stats
+        agg = {f: round(sum(s[f] for s in stats), 3)
+               for f in ("knn_seconds", "pools_seconds", "prune_seconds",
+                         "finish_seconds")}
+        print(f"sharded build ({path_name}): {args.shards} shards, "
+              f"{build_seconds:.1f}s total "
+              + " ".join(f"{k_}={v}" for k_, v in agg.items()))
+        if args.bench_build_out:
+            merge_bench_point(args.bench_build_out, {
+                "n": args.n, "dim": args.dim, "stage": "sharded_build",
+                "shards": args.shards, "path": path_name,
+                "degree": args.max_degree,
+                "knn_backend": args.knn_backend,
+                "seconds": round(build_seconds, 3), **agg,
+            })
+            print(f"merged sharded_build point into "
+                  f"{args.bench_build_out}")
+        obj = ShardedRepruneObjective(idx, data, queries, k=10,
+                                      recall_floor=args.recall_floor,
+                                      qps_repeats=3)
         space = obj.space
     else:
         quantized = (args.dist_backend is not None
@@ -159,7 +256,8 @@ def main():
         fam = getattr(obj, "family_prunes", getattr(obj, "reprunes", 0))
         print(f"reprune grid: {fam} family/derivation passes, "
               f"{obj.grid_hits} pure grid lookups")
-    if args.spec and args.shards > 1:
+    if args.shards > 1:
+        from repro.core.pipeline import structural_build_count
         built = structural_build_count() - b0
         print(f"sharded sweep: {built} structural builds for "
               f"{args.shards} shards "

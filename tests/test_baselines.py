@@ -22,6 +22,7 @@ def test_ivf_recall_increases_with_nprobe(ann_data):
     assert r_all >= 0.999
 
 
+@pytest.mark.slow
 def test_pq_compresses_but_caps_recall(ann_data):
     """Paper: PQ is memory-efficient and fast but can't hit recall 0.9
     without re-ranking."""

@@ -104,6 +104,7 @@ def test_nn_descent_init_ids_patch(ann_data):
     assert rec_p >= 0.93, (rec_p, rec_f)
 
 
+@pytest.mark.slow
 def test_pipeline_antihub_subset_reuse(ann_data):
     """With an NN-Descent backend and antihub subsampling, the subset kNN
     graph is patched from the full-data table instead of rebuilt — and the

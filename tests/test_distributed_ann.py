@@ -42,6 +42,7 @@ MULTI = textwrap.dedent("""
     from repro.core import IndexParams, recall_at_k
     from repro.core.distributed import ShardedIndex, make_sharded_l2_topk
     from repro.core.flat import FlatIndex
+    from repro.core.pipeline import structural_build_count
     from repro.data import clustered_vectors, queries_like
     from repro.launch.mesh import make_host_mesh
 
@@ -51,6 +52,25 @@ MULTI = textwrap.dedent("""
     queries = queries_like(jax.random.PRNGKey(1), data, 32)
     _, ti = FlatIndex(data).search(queries, 10)
 
+    # ISSUE 7 acceptance: no (s*m, dim)-sized host numpy allocation on the
+    # sharded fit/reprune path — track the largest single numpy allocation
+    # while the 4-shard fit + reprune run (device blocks don't go through
+    # numpy; the old path materialized the full base/neighbor tables here)
+    peak = {"max": 0}
+    def _track(name):
+        orig = getattr(np, name)
+        def wrapped(*a, **k):
+            out = orig(*a, **k)
+            if isinstance(out, np.ndarray):
+                peak["max"] = max(peak["max"], out.nbytes)
+            return out
+        return orig, wrapped
+    patched = {n: _track(n) for n in
+               ("zeros", "full", "empty", "ones", "asarray", "array",
+                "concatenate")}
+    for n, (_, w) in patched.items():
+        setattr(np, n, w)
+
     mesh = make_host_mesh(data=2, model=4)
     # pca_dim 22/24: aggressive enough to exercise the projection path, but
     # the exact-in-projected-space recall ceiling at pca_dim=20 (~0.86 under
@@ -59,9 +79,25 @@ MULTI = textwrap.dedent("""
                          ef_search=48, graph_degree=12, build_knn_k=12,
                          build_candidates=32)
     idx = ShardedIndex(params, mesh).fit(data)
+    before = structural_build_count()
+    der = idx.reprune(alpha=1.2, degree=8)
+    jax.block_until_ready(der.arrays.neighbors)
+    assert structural_build_count() == before
+
+    for n, (orig, _) in patched.items():
+        setattr(np, n, orig)
+    full_table = idx.arrays.base.shape[0] * idx.arrays.base.shape[1] * 4
+    assert peak["max"] < full_table, (
+        f"host alloc {peak['max']}B >= full-table {full_table}B: the "
+        "sharded fit/reprune path must stay shard-chunked on host")
+
     d, i = idx.search(queries, 10)
     r = recall_at_k(i, ti)
     assert r >= 0.85, f"sharded recall {r}"
+    dd, di = der.search(queries, 10)
+    rd = recall_at_k(di, ti)
+    assert rd >= 0.7, f"derived recall {rd}"
+    assert der.arrays.neighbors.shape[1] == 8
 
     # exact sharded brute force across 4 shards
     fn = make_sharded_l2_topk(mesh, k=10, chunk=256)
@@ -94,10 +130,17 @@ def test_sharded_index_eight_devices():
 
 
 def test_sharded_index_reprune_parity(ann_data):
-    """ISSUE acceptance: a ShardedIndex repruned to (degree, alpha) serves
-    bit-identical neighbors to per-shard ``reprune_nsg``, with zero
-    structural rebuilds."""
-    from repro.core.build import reprune_nsg
+    """ISSUE acceptance: the mesh reprune is the shard-local derivation.
+
+    The ``shard_map`` path must be bit-identical to calling
+    ``derive_local`` directly on the mesh-resident shard arrays; its
+    prune stage must be bit-identical to the host streaming
+    ``build.prune.reprune``; and the repair tail must leave every valid
+    row reachable from the shard medoid — all with zero structural
+    rebuilds."""
+    import jax.numpy as jnp
+    from repro.core.build import derive_local, reachable_mask
+    from repro.core.build.prune import reprune as prune_reprune
     from repro.core.pipeline import structural_build_count
 
     mesh = make_host_mesh(data=1, model=1)
@@ -107,14 +150,31 @@ def test_sharded_index_reprune_parity(ann_data):
     der = idx.reprune(alpha=1.2, degree=8)
     assert structural_build_count() == before, "reprune must not rebuild"
     assert der.arrays.neighbors.shape[1] == 8
-    off = 0
-    for sub in idx.subs:
-        g = reprune_nsg(sub.base, sub.graph, alpha=1.2, degree=8,
-                        knn_ids=sub.knn_ids)
-        np.testing.assert_array_equal(
-            np.asarray(der.arrays.neighbors)[off:off + sub.ntotal],
-            np.asarray(g.neighbors))
-        off += der._m
+
+    # shard_map output == direct derive_local on the same shard arrays
+    valid = idx.arrays.global_ids >= 0
+    direct = derive_local(idx.arrays.base, idx.struct_neighbors,
+                          idx.knn_ids, idx.medoids[0], valid,
+                          alpha=1.2, degree=8)
+    np.testing.assert_array_equal(np.asarray(der.arrays.neighbors),
+                                  np.asarray(direct))
+
+    # the prune stage (repair off) is bit-identical to the host streaming
+    # reprune of the same max-degree adjacency
+    pruned = derive_local(idx.arrays.base, idx.struct_neighbors,
+                          idx.knn_ids, idx.medoids[0], valid,
+                          alpha=1.2, degree=8, repair=False)
+    ref = prune_reprune(idx.arrays.base, idx.struct_neighbors,
+                        alpha=1.2, degree=8)
+    np.testing.assert_array_equal(np.asarray(pruned), np.asarray(ref))
+
+    # repair contract: every valid row reachable from the medoid
+    reach = reachable_mask(der.arrays.neighbors, int(idx.medoids[0]))
+    assert bool(jnp.all(reach | ~valid))
+    # ...and no derived edge points at a padded slot
+    nb = np.asarray(der.arrays.neighbors)
+    assert (nb[~np.asarray(valid)] == -1).all()
+
     # the parent keeps serving its own (unchanged) graph
     d, i = idx.search(ann_data["queries"], 10)
     assert recall_at_k(i, ann_data["true_i"]) >= 0.85
@@ -169,3 +229,183 @@ def test_sharded_factory_reprune_rejects_non_graph():
     idx = ShardedFactoryIndex("Flat", n_shards=2).fit(data)
     with pytest.raises(TypeError, match="reprune"):
         idx.reprune(alpha=1.2)
+
+
+# ------------------------------------------------- host-side assembly bugs
+
+
+@pytest.mark.parametrize("n,s", [(10, 3), (7, 4), (2000, 3), (1000003, 7),
+                                 (5, 5), (16, 1), (999999, 8)])
+def test_shard_bounds_exact(n, s):
+    """Bugfix regression: ``np.linspace(0, n, s+1).astype(int)`` truncates
+    toward zero, so interior shards could silently gain/lose rows (and the
+    padded shard size m could undercount). The exact integer split must
+    cover [0, n) with sizes differing by at most one row."""
+    from repro.core.distributed import shard_bounds
+
+    b = shard_bounds(n, s)
+    assert b[0] == 0 and b[-1] == n
+    sizes = np.diff(b)
+    assert sizes.sum() == n
+    assert (sizes >= 0).all()
+    assert sizes.max() - sizes.min() <= 1
+    assert sizes.max() == -(-n // s)      # matches the padded row count m
+
+
+def test_padded_entry_point_slots_masked():
+    """Bugfix regression: a padded (all-zero) centroid slot must never win
+    the entry argmin. Row 0 is edge-less here, so the old behavior —
+    ``members`` padded with 0 and an unmasked argmin for a near-origin
+    query — would enter at row 0 and strand the beam."""
+    import jax.numpy as jnp
+    from repro.core.distributed import _stream_local
+
+    base = jnp.array([[100.0, 100.0],       # far, edge-less row
+                      [5.0, 5.0], [5.5, 5.0], [5.0, 5.5]], jnp.float32)
+    nbrs = jnp.array([[-1, -1], [2, 3], [1, 3], [1, 2]], jnp.int32)
+    gids = jnp.arange(4, dtype=jnp.int32)
+    cents = jnp.array([[5.2, 5.2], [0.0, 0.0]], jnp.float32)  # slot 1 padded
+    members = jnp.array([1, -1], jnp.int32)
+    norms = jnp.sum(base * base, axis=-1)
+    q = jnp.zeros((1, 2), jnp.float32)      # zero centroid wins if unmasked
+    d, gi = _stream_local(q, base, nbrs, gids, cents, members, norms,
+                          ef=4, k=3, max_iters=16, mode="while",
+                          prenorm=True)
+    got = set(np.asarray(gi)[0].tolist())
+    assert got == {1, 2, 3}, f"beam entered a padded slot: {got}"
+
+
+def test_sharded_memory_bytes_analytic(ann_data):
+    """Bugfix regression: mesh footprint is counted analytically over the
+    device arrays, shared parent/clone buffers counted once — a derived
+    reprune clone adds exactly its own neighbors table."""
+    mesh = make_host_mesh(data=1, model=1)
+    idx = ShardedIndex(PARAMS, mesh).fit(ann_data["data"])
+    mb = idx.memory_bytes()
+    base_bytes = int(idx.arrays.base.nbytes)
+    assert mb >= base_bytes + int(idx.arrays.neighbors.nbytes)
+    der = idx.reprune(alpha=1.2, degree=8)
+    assert der.memory_bytes() == mb + int(der.arrays.neighbors.nbytes)
+
+
+def test_sharded_factory_memory_bytes_fallback():
+    """Bugfix regression: subs without a ``memory_bytes`` method used to be
+    silently counted as 0 — the analytic device-array walk must see their
+    arrays instead."""
+    import jax.numpy as jnp
+    from repro.core.distributed import (
+        ShardedFactoryIndex, device_array_bytes,
+    )
+
+    data = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+    idx = ShardedFactoryIndex("Flat", n_shards=2).fit(data)
+
+    class Bare:        # an Index-protocol sub with no memory_bytes
+        def __init__(self, b):
+            self.base = jnp.asarray(b)
+
+    idx.subs = [Bare(data[:32]), Bare(data[32:])]
+    got = idx.memory_bytes()
+    expect = sum(device_array_bytes(s) for s in idx.subs)
+    assert expect >= int(jnp.asarray(data).nbytes)
+    assert got == expect, "method-less subs must not count as 0 bytes"
+
+
+# ------------------------------------------------------- host-offload tier
+
+
+def test_host_offload_store_roundtrip():
+    import jax.numpy as jnp
+    from repro.core.build import HostOffloadStore
+
+    store = HostOffloadStore()
+    tree = {"a": jnp.arange(12, dtype=jnp.int32).reshape(3, 4),
+            "b": jnp.ones((5,), jnp.float32)}
+    store.offload(0, tree)
+    assert 0 in store and list(store.keys()) == [0]
+    assert store.nbytes() == 12 * 4 + 5 * 4
+    # staged prefetch is consumed by fetch; values survive the round trip
+    store.prefetch(0)
+    out = store.fetch(0)
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(out["b"]),
+                                  np.asarray(tree["b"]))
+    # un-prefetched fetch works too, and drop forgets both copies
+    out2 = store.fetch(0)
+    np.testing.assert_array_equal(np.asarray(out2["a"]),
+                                  np.asarray(tree["a"]))
+    store.drop(0)
+    assert 0 not in store and store.nbytes() == 0
+
+
+def test_streamed_sharded_index(ann_data):
+    """Host-offload tier: same recall contract as the SPMD path, reprune
+    stays rebuild-free, and the derived clone shares every non-neighbors
+    host buffer with its parent."""
+    from repro.core.distributed import StreamedShardedIndex
+    from repro.core.pipeline import structural_build_count
+
+    idx = StreamedShardedIndex(PARAMS, n_shards=3).fit(ann_data["data"])
+    assert idx.n_structural_builds == 3
+    assert idx.ntotal == ann_data["data"].shape[0]
+    d, i = idx.search(ann_data["queries"], 10)
+    assert recall_at_k(i, ann_data["true_i"]) >= 0.85
+
+    before = structural_build_count()
+    der = idx.reprune(alpha=1.2, degree=8)
+    assert structural_build_count() == before, "reprune must not rebuild"
+    d2, i2 = der.search(ann_data["queries"], 10)
+    assert recall_at_k(i2, ann_data["true_i"]) >= 0.7
+    for key in idx.store.keys():
+        parent = idx.store.peek_host(key)
+        child = der.store.peek_host(key)
+        assert np.asarray(child["neighbors"]).shape[1] == 8
+        for field in ("base", "global_ids", "centroids", "members",
+                      "base_norms", "knn_ids", "medoid"):
+            assert child[field] is parent[field], f"{field} not shared"
+    # footprint: parent store + the derived neighbors tables only
+    der_nbytes = sum(
+        int(np.asarray(der.store.peek_host(k)["neighbors"]).nbytes)
+        for k in der.store.keys())
+    assert der.memory_bytes() == idx.memory_bytes() + der_nbytes
+
+
+def test_sharded_fit_no_full_table_host_alloc(ann_data):
+    """ISSUE acceptance: the sharded fit/reprune path performs no
+    (s*m, dim)-sized host numpy allocation — the largest single numpy
+    allocation while fitting + repruning 4 shards stays below the full
+    base table."""
+    from repro.core.distributed import StreamedShardedIndex
+
+    data = ann_data["data"]
+    full_table = data.shape[0] * data.shape[1] * 4      # (s*m, dim) f32
+    peak = {"max": 0}
+
+    def track(name):
+        orig = getattr(np, name)
+
+        def wrapped(*a, **k):
+            out = orig(*a, **k)
+            if isinstance(out, np.ndarray):
+                peak["max"] = max(peak["max"], out.nbytes)
+            return out
+        return orig, wrapped
+
+    names = ("zeros", "full", "empty", "ones", "asarray", "array",
+             "concatenate")
+    saved = {}
+    try:
+        for n in names:
+            saved[n], wrapped = track(n)
+            setattr(np, n, wrapped)
+        idx = StreamedShardedIndex(PARAMS, n_shards=4).fit(data)
+        der = idx.reprune(alpha=1.1, degree=8)
+        for k in der.store.keys():      # force the derived tables out
+            jax.block_until_ready(der.store.fetch(k)["neighbors"])
+    finally:
+        for n, orig in saved.items():
+            setattr(np, n, orig)
+    assert 0 < peak["max"] < full_table, (
+        f"host alloc peak {peak['max']}B vs full table {full_table}B — "
+        "fit/reprune must stay shard-chunked on host")

@@ -184,10 +184,15 @@ def _keyed_candidates(seed, b, m, n_ids):
 
 
 @pytest.mark.parametrize("b,kcur,m,k,br", [
-    (17, 8, 19, 8, 8),      # odd sizes, non-pow2 candidate width
-    (64, 12, 44, 12, 64),   # block_rows == b
-    (5, 4, 3, 6, 2),        # fewer candidates than k
-    (33, 20, 64, 10, 16),   # truncating k
+    # interpreted-mode Pallas on CPU makes the big grids ~30s each: the
+    # small case keeps fast-lane coverage, the rest ride the slow lane
+    pytest.param(17, 8, 19, 8, 8, marks=pytest.mark.slow,
+                 id="17-8-19-8-8"),      # odd sizes, non-pow2 width
+    pytest.param(64, 12, 44, 12, 64, marks=pytest.mark.slow,
+                 id="64-12-44-12-64"),   # block_rows == b
+    (5, 4, 3, 6, 2),                     # fewer candidates than k
+    pytest.param(33, 20, 64, 10, 16, marks=pytest.mark.slow,
+                 id="33-20-64-10-16"),   # truncating k
 ])
 def test_topk_merge_pallas_matches_ref(b, kcur, m, k, br):
     from repro.kernels.topk_merge import topk_merge
@@ -216,7 +221,10 @@ def test_topk_merge_pallas_matches_ref(b, kcur, m, k, br):
     np.testing.assert_array_equal(np.asarray(rf), np.asarray(pf))
 
 
-@pytest.mark.parametrize("b,m,k", [(23, 37, 9), (8, 8, 8), (50, 130, 24)])
+@pytest.mark.parametrize("b,m,k", [
+    (23, 37, 9), (8, 8, 8),
+    pytest.param(50, 130, 24, marks=pytest.mark.slow, id="50-130-24"),
+])
 def test_topk_pool_pallas_matches_ref(b, m, k):
     from repro.kernels.topk_merge import topk_pool
     from repro.kernels.topk_merge.ref import topk_pool_ref
@@ -239,6 +247,7 @@ def test_topk_merge_backend_dispatch():
         resolve_merge_backend("bogus")
 
 
+@pytest.mark.slow
 def test_nn_descent_merge_backends_agree(ann_data):
     """The whole NN-Descent build is bit-identical across merge backends
     (same seed, same rounds — only the sort implementation differs)."""

@@ -150,6 +150,7 @@ if HAVE_HYPOTHESIS:
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_beam_search_quantized_requires_batched_and_codes(small_db):
     data, queries, _ = small_db
     idx = build_index("NSG12,EP4", data, key=jax.random.PRNGKey(0))
@@ -163,6 +164,7 @@ def test_beam_search_quantized_requires_batched_and_codes(small_db):
                     layout="batched", dist_backend="pq")
 
 
+@pytest.mark.slow
 def test_quantized_beam_matches_adc_ranking(small_db):
     """The quantized beam's distances ARE lut_dist values of its ids."""
     data, queries, _ = small_db
@@ -184,6 +186,7 @@ def test_quantized_beam_matches_adc_ranking(small_db):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_factory_grammar_quantized(small_db):
     data, _, _ = small_db
     idx = build_index("NSG12,EP4,PQ8x8,Rerank32", data,
@@ -210,6 +213,7 @@ def test_quantized_examples_registered():
     assert any("SQ8" in s for s in nsg)
 
 
+@pytest.mark.slow
 def test_rerank_recovers_f32_recall(small_db):
     """Acceptance: quantized recall@10 within 1pt of f32 at rerank=64."""
     data, queries, true_i = small_db
@@ -222,6 +226,7 @@ def test_rerank_recovers_f32_recall(small_db):
         assert r_q >= r_f32 - 0.01, (spec, r_q, r_f32)
 
 
+@pytest.mark.slow
 def test_runtime_dist_backend_switch(small_db):
     """An f32-built index serves quantized via SearchParams alone."""
     data, queries, true_i = small_db
@@ -252,6 +257,7 @@ def test_rerank_zero_returns_adc_distances(small_db):
                                np.asarray(again)[valid], rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_byte_traffic_reduction(small_db):
     """CPU stand-in for the >=2x QPS acceptance: per-hop bytes touched.
 
@@ -274,6 +280,7 @@ def test_byte_traffic_reduction(small_db):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_memory_bytes_analytic(small_db):
     """Composed-index footprint must equal the analytic formula exactly."""
     data, _, _ = small_db
@@ -397,6 +404,7 @@ if HAVE_HYPOTHESIS:
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_tuner_codec_rebuild_free(small_db):
     """dist_backend/rerank/alpha sweeps: ONE structural build, ONE codec
     training per (structure, backend) — codes shared across trials."""
@@ -425,6 +433,7 @@ def test_default_space_quantized_knobs(small_db):
     assert "dist_backend" not in default_space(16, 800).names()
 
 
+@pytest.mark.slow
 def test_sharded_quantized(small_db):
     from repro.core.distributed import ShardedFactoryIndex
     data, queries, true_i = small_db
@@ -436,6 +445,32 @@ def test_sharded_quantized(small_db):
                                SearchParams(ef_search=64))[1], true_i)
     assert r >= 0.85
     assert idx.memory_bytes() >= sum(s.memory_bytes() for s in idx.subs)
+
+
+@pytest.mark.slow
+def test_sharded_reprune_keeps_quantized_codes(small_db):
+    """Sharded reprune x quantized serving: deriving an (alpha, degree)
+    variant must not re-encode — per-shard codes/codecs are shared with
+    the parent (same objects), stay equal to a fresh encode of the shard
+    base, and the derived index still serves the quantized+rerank path."""
+    from repro.core.distributed import ShardedFactoryIndex
+    data, queries, true_i = small_db
+    idx = ShardedFactoryIndex("NSG12,EP4,PQ8x8,Rerank32", n_shards=2).fit(
+        data, key=jax.random.PRNGKey(0))
+    b0 = structural_build_count()
+    der = idx.reprune(alpha=1.1, degree=8)
+    assert structural_build_count() == b0, "reprune must not rebuild"
+    for sub, dsub in zip(idx.subs, der.subs):
+        assert dsub.codes is sub.codes, "reprune re-encoded the shard"
+        assert dsub.codec is sub.codec
+        assert dsub.graph.neighbors.shape[1] == 8
+        # rerank parity: the shared codes ARE the fresh-encoded baseline
+        np.testing.assert_array_equal(
+            np.asarray(dsub.codes),
+            np.asarray(dsub.codec.encode(dsub.base)))
+    r = recall_at_k(der.search(queries, 10,
+                               SearchParams(ef_search=64))[1], true_i)
+    assert r >= 0.8
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,116 @@
+"""Shard-local derivation (build.shardlocal) + streamed prune substrate:
+the jittable reprune/repair program that runs under shard_map, and the
+chunk-streaming invariants it relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.build import (
+    DEFAULT_CHUNK, chunk_spans, derive_local, reachable_mask, repair_local,
+)
+from repro.core.build.prune import (
+    reprune, sorted_adjacency, sorted_adjacency_chunk,
+)
+
+
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(3)
+    data = jax.random.normal(key, (160, 8), jnp.float32)
+    d = jnp.sum((data[:, None, :] - data[None, :, :]) ** 2, axis=-1)
+    order = jnp.argsort(d, axis=1)
+    knn = order[:, 1:13].astype(jnp.int32)          # (N, 12), self excluded
+    return data, knn
+
+
+def test_chunk_spans_cover():
+    assert list(chunk_spans(10, 4)) == [(0, 4), (4, 8), (8, 10)]
+    assert list(chunk_spans(4, 4)) == [(0, 4)]
+    assert list(chunk_spans(0, 4)) == []
+    spans = list(chunk_spans(DEFAULT_CHUNK + 1))
+    assert spans[0] == (0, DEFAULT_CHUNK) and spans[-1][1] == DEFAULT_CHUNK + 1
+
+
+def test_sorted_adjacency_chunk_matches_materialized(toy):
+    data, knn = toy
+    ids_m, d_m = sorted_adjacency(data, knn)
+    outs_i, outs_d = [], []
+    for s, e in chunk_spans(knn.shape[0], 37):
+        ci, cd = sorted_adjacency_chunk(data, data[s:e], knn[s:e])
+        outs_i.append(ci)
+        outs_d.append(cd)
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(outs_i)),
+                                  np.asarray(ids_m))
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs_d)),
+                               np.asarray(d_m), rtol=0, atol=0)
+
+
+def test_reprune_chunk_invariant(toy):
+    """Streaming is row-independent: any chunk size yields bit-identical
+    derived adjacencies."""
+    data, knn = toy
+    a = reprune(data, knn, alpha=1.1, degree=6, chunk=2048)
+    b = reprune(data, knn, alpha=1.1, degree=6, chunk=7)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("alpha,degree", [(1.0, 12), (1.1, 6), (1.3, 8)])
+def test_derive_local_prune_stage_parity(toy, alpha, degree):
+    """derive_local(repair=False) must be bit-identical to the host
+    streaming reprune — including with a block size that forces padding."""
+    data, knn = toy
+    ref = reprune(data, knn, alpha=alpha, degree=degree)
+    got = derive_local(data, knn, knn, 0, alpha=alpha, degree=degree,
+                       repair=False, blk=64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_repair_local_reconnects(toy):
+    """Nodes with no incoming edges must end up reachable from the
+    medoid, without disturbing protected-slot monotonicity guarantees
+    (every row still holds at most its original degree)."""
+    data, knn = toy
+    n = data.shape[0]
+    nbrs = reprune(data, knn, alpha=1.0, degree=6)
+    # sever all incoming edges of the last 12 nodes
+    nbrs = jnp.where(nbrs >= n - 12, -1, nbrs)
+    medoid = 0
+    assert not bool(jnp.all(reachable_mask(nbrs, medoid)[:n]))
+    out, rounds = repair_local(data, nbrs, knn, medoid)
+    assert int(rounds) >= 1
+    assert bool(jnp.all(reachable_mask(out, medoid)))
+    assert out.shape == nbrs.shape
+
+
+def test_derive_local_padded_rows_inert(toy):
+    """The shard_map path hands derive_local padded (invalid) rows: they
+    must come out edge-less, never be attached, and never be chosen as
+    repair parents for valid rows."""
+    data, knn = toy
+    n = data.shape[0]
+    pad = 24
+    base = jnp.concatenate([data, jnp.zeros((pad, data.shape[1]))], axis=0)
+    nbrs = jnp.concatenate(
+        [reprune(data, knn, alpha=1.0, degree=12),
+         jnp.full((pad, 12), -1, jnp.int32)], axis=0)
+    knn_p = jnp.concatenate([knn, jnp.full((pad, 12), -1, jnp.int32)])
+    valid = jnp.arange(n + pad) < n
+    out = derive_local(base, nbrs, knn_p, 0, valid, alpha=1.1, degree=6)
+    out_np = np.asarray(out)
+    assert (out_np[n:] == -1).all(), "padded rows grew edges"
+    assert (out_np[:n] < n).all(), "a valid row points at a padded slot"
+    reach = reachable_mask(out, 0)
+    assert bool(jnp.all(reach[:n])), "valid rows must stay reachable"
+
+
+def test_derive_local_degree_roundtrip(toy):
+    """Chained derivations re-derive from the same structural adjacency,
+    so degree can go back up: deriving at R then at 6 then asking for R
+    again from the structural graph gives the original R-derivation."""
+    data, knn = toy
+    full = derive_local(data, knn, knn, 0, alpha=1.0, degree=12)
+    again = derive_local(data, knn, knn, 0, alpha=1.0, degree=12)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(again))
+    low = derive_local(data, knn, knn, 0, alpha=1.0, degree=6)
+    assert low.shape[1] == 6
