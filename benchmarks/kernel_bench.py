@@ -1,19 +1,35 @@
 """Kernel microbenchmarks: Pallas (interpret) vs jnp oracle correctness at
 bench shapes + wall-times of the XLA path that production uses on CPU.
 (True Pallas speed requires a TPU; interpret mode only proves correctness,
-so the CSV reports the jnp path as `us_per_call` and flags the backend.)"""
+so the CSV reports the jnp path as `us_per_call` and flags the backend.)
+
+Also owns the ``stage="beam_hop"`` section of BENCH_qps.json: the fused
+beam-hop kernel vs the staged hop, end-to-end at a pinned search config,
+with the per-hop HBM traffic model (``repro.analysis.hop_traffic``)
+attached to every point. Run standalone it merges those points into the
+existing BENCH_qps.json (qps_recall_curves owns the rest of the file and
+calls ``beam_hop_points`` itself on a full run)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table, save
+from benchmarks.common import REPO_ROOT, dataset, measure_qps, print_table, \
+    save
+from repro.analysis.hop_traffic import hop_traffic_report
 from repro.kernels.embedding_bag import embedding_bag
 from repro.kernels.gather_dist import gather_dist
 from repro.kernels.l2topk import l2_topk
+
+# The pinned beam-hop comparison config: the standard NSG sweep spec at the
+# widest swept beam. ISSUE gate: fused spilled-traffic reduction >= 2x here.
+BEAM_HOP_SPEC = "NSG24,EP32"
+BEAM_HOP_EF = 64
 
 
 def _t(fn, *a, repeats=5):
@@ -53,11 +69,120 @@ def run():
     err = float(jnp.max(jnp.abs(a - b)))
     rows.append(["embedding_bag", f"{us:.0f}", f"allclose_err={err:.2e}"])
 
+    # fused beam-hop: one hop at bench shape, jnp ref timing + interpret
+    # parity of the Pallas kernel against it (bit-exact by construction)
+    from repro.kernels.beam_hop import beam_hop
+    kq = jax.random.PRNGKey(7)
+    nq, ef, r = 64, 64, 24
+    sel = jax.random.randint(kq, (nq,), 0, 20000)
+    nbrs = jax.random.randint(jax.random.PRNGKey(8), (20000, r), -1, 20000)
+    pi = jax.random.randint(jax.random.PRNGKey(9), (nq, ef), -1, 20000)
+    pd = jnp.where(pi >= 0,
+                   jax.random.uniform(jax.random.PRNGKey(10), (nq, ef)) * 50,
+                   jnp.inf)
+    pv = pi < 0
+    us = _t(lambda *a: beam_hop(*a, backend="jnp"),
+            sel, nbrs, pi, pd, pv, q, db)
+    a = beam_hop(sel[:8], nbrs, pi[:8], pd[:8], pv[:8], q[:8], db,
+                 backend="pallas")
+    b = beam_hop(sel[:8], nbrs, pi[:8], pd[:8], pv[:8], q[:8], db,
+                 backend="jnp")
+    both_inf = ~jnp.isfinite(a[1]) & ~jnp.isfinite(b[1])
+    err = max(float(jnp.max(jnp.abs(a[0] - b[0]))),
+              float(jnp.max(jnp.where(both_inf, 0.0,
+                                      jnp.abs(a[1] - b[1])))))
+    rows.append(["beam_hop", f"{us:.0f}", f"bitexact_err={err:.2e}"])
+
     headers = ["kernel", "us_per_call(jnp/cpu)", "pallas_interpret_check"]
     print_table("Kernel microbench", headers, rows)
     save("kernel_bench", rows, headers)
     return rows
 
 
+def beam_hop_points(data, queries, true_i):
+    """Fused-vs-staged hop backends, end-to-end at the pinned config.
+
+    One build of ``BEAM_HOP_SPEC``; each (dist_backend, hop_backend) cell
+    measures recall@10 + QPS at ef=BEAM_HOP_EF, attaches the work counters
+    from ``search_stats()`` (identical across hop backends — work parity),
+    and prices the hop with the ``repro.analysis.hop_traffic`` model.
+    ``spill_reduction_vs_staged`` / ``total_reduction_vs_staged`` carry the
+    ISSUE's >= 2x per-hop spilled-HBM-traffic gate (CI asserts it).
+    """
+    from repro.core import SearchParams, build_index, recall_at_k
+
+    idx = build_index(BEAM_HOP_SPEC, data)
+    r = idx.params.graph_degree
+    dim = data.shape[1]
+    k = true_i.shape[1]
+    points = []
+    for dist_backend in ("f32", "pq"):
+        pq_m = 0
+        for hop in ("staged", "fused"):
+            params = SearchParams(ef_search=BEAM_HOP_EF, hop_backend=hop,
+                                  dist_backend=dist_backend)
+            d, i = idx.search(queries, k, params)
+            rec = float(recall_at_k(i, true_i))
+            qps = measure_qps(lambda q: idx.search(q, k, params)[0],
+                              queries, repeats=3)
+            stats = idx.search_stats()
+            if dist_backend != "f32" and idx.codes is not None:
+                pq_m = int(idx.codes.shape[1])
+            traffic = hop_traffic_report(BEAM_HOP_EF, r, dim, dist_backend,
+                                         pq_m=pq_m)
+            points.append({
+                "stage": "beam_hop", "spec": BEAM_HOP_SPEC,
+                "hop_backend": hop, "dist_backend": dist_backend,
+                "ef": BEAM_HOP_EF, "recall": round(rec, 4),
+                "qps": round(qps, 1), **stats,
+                "spilled_bytes_per_hop":
+                    traffic[f"{hop}_spilled_bytes_per_hop"],
+                "compulsory_bytes_per_hop":
+                    traffic["compulsory_bytes_per_hop"],
+                "spill_reduction_vs_staged":
+                    traffic["spill_reduction_vs_staged"],
+                "total_reduction_vs_staged":
+                    traffic["total_reduction_vs_staged"],
+            })
+    return points
+
+
+def merge_beam_hop_points(points, path=None):
+    """Replace the stage='beam_hop' section of BENCH_qps.json in place.
+
+    qps_recall_curves overwrites the whole file on a full run; standalone
+    kernel_bench runs must not clobber its sweeps, so this read-modify-
+    writes only its own section (fresh document if the file is missing).
+    """
+    from benchmarks.common import DIM, K, N_DB, N_QUERIES
+    path = path or os.path.join(REPO_ROOT, "BENCH_qps.json")
+    doc = {"backend": jax.default_backend(),
+           "dataset": {"n": N_DB, "dim": DIM, "n_queries": N_QUERIES,
+                       "k": K},
+           "points": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            pass
+    doc["points"] = [p for p in doc.get("points", [])
+                     if p.get("stage") != "beam_hop"] + points
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=str)
+    return path
+
+
 if __name__ == "__main__":
     run()
+    _data, _queries, _ti = dataset()
+    _pts = beam_hop_points(_data, _queries, _ti)
+    _path = merge_beam_hop_points(_pts)
+    print_table(
+        "beam_hop fused vs staged",
+        ["config", "recall@10", "QPS", "spilled B/hop", "vs staged"],
+        [[f"{p['dist_backend']}/{p['hop_backend']}", p["recall"], p["qps"],
+          p["spilled_bytes_per_hop"],
+          f"{p['spill_reduction_vs_staged']}x spill"
+          if p["hop_backend"] == "fused" else ""] for p in _pts])
+    print(f"merged {len(_pts)} beam_hop points into {_path}")

@@ -82,6 +82,18 @@ def run():
                          p["recall"], f"{p['qps']:.1f}",
                          f"{p['qps_vs_f32']}x f32"])
 
+    # fused vs staged beam hop at the pinned config (kernel_bench owns the
+    # measurement + the per-hop traffic model; points carry the >= 2x
+    # spilled-traffic gate CI asserts on)
+    from benchmarks.kernel_bench import beam_hop_points
+    bh = beam_hop_points(data, queries, ti)
+    points.extend(bh)
+    for p in bh:
+        rows.append([f"{p['spec']} hop={p['hop_backend']} "
+                     f"({p['dist_backend']})", p["recall"],
+                     f"{p['qps']:.1f}",
+                     f"spill {p['spilled_bytes_per_hop']}B/hop"])
+
     headers = ["config", "recall@10", "QPS", ""]
     print_table("QPS-recall frontiers", headers, rows)
     save("qps_recall_curves", rows, headers)

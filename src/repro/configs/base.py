@@ -165,6 +165,7 @@ class ANNConfig:
     dist_backend: str = "f32"        # f32 | pq | int8 (core.quant serving)
     pq_m: int = 0                    # PQ sub-quantizers (0 = auto by dim)
     rerank: int = 64                 # exact-rerank depth of quantized tail
+    hop_backend: str = "auto"        # staged | fused | auto (beam hop)
     dtype: str = "float32"
 
 

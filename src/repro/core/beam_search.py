@@ -25,24 +25,51 @@ Two batch layouts:
   * ``vmap``: per-query program, lifted over the batch by `jax.vmap` (the
     original formulation — one (R, D) gather per query per hop).
   * ``batched``: batch-major — all Q queries step together, so each hop is
-    ONE (Q, R) id block fed to a single gather+distance call. That block is
-    exactly the shape `kernels/gather_dist` wants, so the Pallas
-    scalar-prefetch kernel is the default expansion path on TPU (the jnp
-    reference elsewhere). Converged queries are masked out per hop
-    (`lax.select` on the lane state), which reproduces `vmap(while_loop)`
-    semantics bit-for-bit: both layouts return identical ids and distances.
+    ONE (Q, R) id block fed to a single gather+distance call. Converged
+    queries are masked out per hop (`lax.select` on the lane state), which
+    reproduces `vmap(while_loop)` semantics bit-for-bit: both layouts
+    return identical ids and distances.
+
+Two hop backends (batched layout only):
+  * ``staged``: gather + distance (``kernels/gather_dist`` /
+    ``kernels/lut_dist``) and pool merge as separate device ops — the
+    parity baseline, and the default off-TPU.
+  * ``fused``: one ``kernels/beam_hop`` launch per hop — the scalar-prefetch
+    kernel gathers the graph row, streams the R candidate rows, scores them
+    in-register and merges into the resident pool, so the (Q, R) candidate
+    block never round-trips through HBM. Bit-exact with the staged path
+    when the staged path runs the kernel-family arithmetic
+    (``gather_backend="jnp"|"pallas"``); the dot-formula default gather
+    (`_default_gather_dist`) is a different f32 reduction order.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+import os
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.distances import match_vma
+from repro.kernels.beam_hop import beam_hop as _kernel_beam_hop
+from repro.kernels.beam_hop import merge_one
 from repro.kernels.gather_dist import gather_dist as _kernel_gather_dist
 from repro.kernels.lut_dist import lut_dist as _kernel_lut_dist
+
+
+class BeamStats(NamedTuple):
+    """Per-query work accounting of one beam_search call.
+
+    ``hops``: expansions taken; ``gathered``: neighbor rows whose distance
+    was evaluated; ``dup_gathered``: of those, rows that were already
+    pool-resident (work the approximate visited set failed to skip).
+    Fused and staged hop backends compute these independently — their
+    equality asserts parity on work done, not just results.
+    """
+    hops: jax.Array
+    gathered: jax.Array
+    dup_gathered: jax.Array
 
 
 def _sqdist_rows(query: jax.Array, rows: jax.Array) -> jax.Array:
@@ -53,56 +80,66 @@ def _sqdist_rows(query: jax.Array, rows: jax.Array) -> jax.Array:
         jnp.sum(q * q) + jnp.sum(r * r, axis=-1) - 2.0 * (r @ q), 0.0)
 
 
-def _merge(pool_i, pool_d, pool_v, cand_i, cand_d):
-    """Merge candidates into the sorted pool; dedup against pool ids."""
-    dup = jnp.any(cand_i[:, None] == pool_i[None, :], axis=1)
-    bad = dup | (cand_i < 0)
-    cand_i = jnp.where(bad, -1, cand_i)
-    cand_d = jnp.where(bad, jnp.inf, cand_d)
-    ids = jnp.concatenate([pool_i, cand_i])
-    ds = jnp.concatenate([pool_d, cand_d])
-    vis = jnp.concatenate([pool_v, jnp.zeros(cand_i.shape, bool)])
-    order = jnp.argsort(ds)[: pool_i.shape[0]]
-    return ids[order], ds[order], vis[order]
+def _select_frontier(pool_i, pool_d, pool_v):
+    """Pick the closest unvisited pool entry and mark it visited.
+
+    Axis-generic over the trailing (ef) axis, so the vmap layout ((ef,)
+    arrays), the batched layout ((Q, ef) arrays) and the fused hop all
+    share the one copy. Returns (pool_v, node, active): ``node`` is 0 when
+    the lane has converged (``active`` False) — the caller masks.
+    """
+    unvisited = (~pool_v) & (pool_i >= 0)
+    masked = jnp.where(unvisited, pool_d, jnp.inf)
+    slot = jnp.argmin(masked, axis=-1)
+    active = jnp.take_along_axis(unvisited, slot[..., None], -1)[..., 0]
+    # unconditional mark: a no-op when inactive (the slot is already True
+    # or the whole lane re-selects the same converged state)
+    pool_v = pool_v | (jnp.arange(pool_v.shape[-1]) == slot[..., None])
+    node = jnp.where(
+        active, jnp.take_along_axis(pool_i, slot[..., None], -1)[..., 0], 0)
+    return pool_v, node, active
 
 
 def _expand(state, query, db, neighbors, gather_dist):
-    pool_i, pool_d, pool_v, n_hops = state
-    unvisited = (~pool_v) & (pool_i >= 0)
-    masked = jnp.where(unvisited, pool_d, jnp.inf)
-    slot = jnp.argmin(masked)
-    active = unvisited[slot]                      # False once converged
-    pool_v = pool_v.at[slot].set(True)
-    node = jnp.where(active, pool_i[slot], 0)
+    pool_i, pool_d, pool_v, n_hops, n_gath, n_dup = state
+    pool_v, node, active = _select_frontier(pool_i, pool_d, pool_v)
     nbr = neighbors[node]                         # (R,)
     valid = (nbr >= 0) & active
     safe = jnp.where(valid, nbr, 0)
     nd = gather_dist(query, db, safe)             # (R,) squared L2
     nd = jnp.where(valid, nd, jnp.inf)
-    pool_i, pool_d, pool_v = _merge(
+    pool_i, pool_d, pool_v, dup = merge_one(
         pool_i, pool_d, pool_v, jnp.where(valid, safe, -1), nd)
-    return pool_i, pool_d, pool_v, n_hops + active.astype(jnp.int32)
+    return (pool_i, pool_d, pool_v, n_hops + active.astype(jnp.int32),
+            n_gath + jnp.sum(valid, dtype=jnp.int32), n_dup + dup)
 
 
 def _expand_batch(state, queries, db, neighbors, gather_dist_b):
     """Batch-major `_expand`: one (Q, R) gather + distance block per hop."""
-    pool_i, pool_d, pool_v, n_hops = state        # (Q, ef) / (Q,)
-    q_idx = jnp.arange(pool_i.shape[0])
-    unvisited = (~pool_v) & (pool_i >= 0)
-    masked = jnp.where(unvisited, pool_d, jnp.inf)
-    slot = jnp.argmin(masked, axis=1)             # (Q,)
-    active = jnp.take_along_axis(unvisited, slot[:, None], 1)[:, 0]
-    pool_v = pool_v.at[q_idx, slot].set(True)
-    node = jnp.where(
-        active, jnp.take_along_axis(pool_i, slot[:, None], 1)[:, 0], 0)
+    pool_i, pool_d, pool_v, n_hops, n_gath, n_dup = state
+    pool_v, node, active = _select_frontier(pool_i, pool_d, pool_v)
     nbr = neighbors[node]                         # (Q, R)
     valid = (nbr >= 0) & active[:, None]
     safe = jnp.where(valid, nbr, 0)
     nd = gather_dist_b(queries, db, safe)         # (Q, R) — ONE call per hop
     nd = jnp.where(valid, nd, jnp.inf)
-    pool_i, pool_d, pool_v = jax.vmap(_merge)(
+    pool_i, pool_d, pool_v, dup = jax.vmap(merge_one)(
         pool_i, pool_d, pool_v, jnp.where(valid, safe, -1), nd)
-    return pool_i, pool_d, pool_v, n_hops + active.astype(jnp.int32)
+    return (pool_i, pool_d, pool_v, n_hops + active.astype(jnp.int32),
+            n_gath + jnp.sum(valid, axis=1, dtype=jnp.int32), n_dup + dup)
+
+
+def _expand_fused(state, q_or_lut, table, neighbors, *, dist_backend,
+                  backend):
+    """One ``kernels/beam_hop`` launch: gather+distance+merge fused."""
+    pool_i, pool_d, pool_v, n_hops, n_gath, n_dup = state
+    pool_v, node, active = _select_frontier(pool_i, pool_d, pool_v)
+    sel = jnp.where(active, node, -1)
+    pool_i, pool_d, pool_v, stats = _kernel_beam_hop(
+        sel, neighbors, pool_i, pool_d, pool_v, q_or_lut, table,
+        dist_backend=dist_backend, backend=backend)
+    return (pool_i, pool_d, pool_v, n_hops + active.astype(jnp.int32),
+            n_gath + stats[:, 0], n_dup + stats[:, 1])
 
 
 def resolve_gather_backend(backend: Optional[str] = None) -> Optional[str]:
@@ -111,16 +148,47 @@ def resolve_gather_backend(backend: Optional[str] = None) -> Optional[str]:
     Returning ``None`` (off-TPU default) selects the vmapped
     `_default_gather_dist`, whose lowering is identical to the vmap layout's
     — that is what makes the two layouts agree exactly.
+
+    The ``REPRO_GATHER_BACKEND`` env var ("pallas" | "jnp") overrides the
+    default resolution only (an explicit ``backend`` argument wins). Note
+    the resolver runs at trace time inside jitted callers: an env change
+    after the first compile does not invalidate their caches.
     """
-    if backend is None and jax.default_backend() == "tpu":
-        return "pallas"
+    if backend is None:
+        backend = os.environ.get("REPRO_GATHER_BACKEND") or None
+    if backend is None:
+        return "pallas" if jax.default_backend() == "tpu" else None
+    if backend not in ("pallas", "jnp"):
+        raise ValueError(f"unknown gather backend {backend!r} "
+                         f"(expected 'pallas' | 'jnp')")
+    return backend
+
+
+def resolve_hop_backend(backend: Optional[str] = None) -> str:
+    """None/"auto" -> the fused kernel on TPU, the staged path elsewhere.
+
+    Staged stays the off-TPU default so the CPU layout-parity contract
+    (dot-formula gather == vmap layout bit-for-bit) is undisturbed; on TPU
+    both defaults resolve to the same kernel-family arithmetic, so flipping
+    to fused changes launches per hop, not served bits. Overridable via the
+    ``REPRO_HOP_BACKEND`` env var (same trace-time caveat as
+    ``resolve_gather_backend``).
+    """
+    if backend in (None, "auto"):
+        backend = os.environ.get("REPRO_HOP_BACKEND") or None
+    if backend in (None, "auto"):
+        return "fused" if jax.default_backend() == "tpu" else "staged"
+    if backend not in ("staged", "fused"):
+        raise ValueError(f"unknown hop backend {backend!r} "
+                         f"(expected 'staged' | 'fused' | 'auto')")
     return backend
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("ef", "k", "max_iters", "mode", "gather_dist",
-                     "layout", "gather_backend", "dist_backend"))
+                     "layout", "gather_backend", "dist_backend",
+                     "hop_backend", "with_stats"))
 def beam_search(queries: jax.Array, db: jax.Array, neighbors: jax.Array,
                 entry_ids: jax.Array, *, ef: int, k: int,
                 max_iters: int = 0, mode: str = "while",
@@ -129,12 +197,15 @@ def beam_search(queries: jax.Array, db: jax.Array, neighbors: jax.Array,
                 gather_backend: Optional[str] = None,
                 dist_backend: str = "f32",
                 codes: Optional[jax.Array] = None,
-                lut: Optional[jax.Array] = None):
+                lut: Optional[jax.Array] = None,
+                hop_backend: Optional[str] = None,
+                with_stats: bool = False):
     """Batched graph search.
 
     queries: (Q, D); db: (N, D); neighbors: (N, R) int32 (-1 padded);
     entry_ids: (Q,) int32 per-query entry points (paper's tuned EPs).
-    Returns (dists (Q, k) f32 ascending, ids (Q, k) i32, hops (Q,) i32).
+    Returns (dists (Q, k) f32 ascending, ids (Q, k) i32, hops (Q,) i32);
+    with ``with_stats=True`` the third element is a full ``BeamStats``.
 
     ``layout="vmap"`` lifts a per-query program over the batch;
     ``layout="batched"`` steps all queries together so each hop issues one
@@ -150,6 +221,12 @@ def beam_search(queries: jax.Array, db: jax.Array, neighbors: jax.Array,
     R rows of M bytes instead of R rows of D*4. Only the batched layout
     supports it (the hot path); returned distances are then approximate
     ADC values, which the caller reranks exactly (``Index.search``).
+
+    ``hop_backend="staged"|"fused"`` (batched layout only) picks whether a
+    hop runs as separate gather/distance/merge ops or as one
+    ``kernels/beam_hop`` launch; None/"auto" resolves fused on TPU, staged
+    elsewhere. Under "fused", ``gather_backend`` still picks the kernel
+    flavour ("pallas" = the real fused kernel, "jnp" = its bit-exact ref).
     """
     max_iters = max_iters or 4 * ef
     if dist_backend != "f32" and layout != "batched":
@@ -161,9 +238,14 @@ def beam_search(queries: jax.Array, db: jax.Array, neighbors: jax.Array,
             queries, db, neighbors, entry_ids, ef=ef, k=k,
             max_iters=max_iters, mode=mode, gather_dist=gather_dist,
             gather_backend=gather_backend, dist_backend=dist_backend,
-            codes=codes, lut=lut)
+            codes=codes, lut=lut, hop_backend=hop_backend,
+            with_stats=with_stats)
     if layout != "vmap":
         raise ValueError(f"bad layout {layout!r}")
+    if hop_backend == "fused":
+        raise ValueError(
+            "hop_backend='fused' requires layout='batched' (the fused "
+            "kernel is batch-major); the vmap layout is always staged")
     if gather_dist is None:
         gather_dist = _default_gather_dist
 
@@ -177,13 +259,13 @@ def beam_search(queries: jax.Array, db: jax.Array, neighbors: jax.Array,
         pool_d = match_vma(pool_d, query, db, neighbors, entry)
         pool_v = match_vma(jnp.zeros((ef,), bool), query, db, neighbors,
                            entry)
-        state = (pool_i, pool_d, pool_v,
-                 match_vma(jnp.int32(0), query, db, neighbors, entry))
+        zero = match_vma(jnp.int32(0), query, db, neighbors, entry)
+        state = (pool_i, pool_d, pool_v, zero, zero, zero)
 
         body = lambda s: _expand(s, query, db, neighbors, gather_dist)
         if mode == "while":
             def cond(s):
-                i, d, v, hops = s
+                i, d, v, hops = s[0], s[1], s[2], s[3]
                 return jnp.any((~v) & (i >= 0)) & (hops < max_iters)
             state = jax.lax.while_loop(cond, body, state)
         elif mode == "fori":
@@ -191,15 +273,27 @@ def beam_search(queries: jax.Array, db: jax.Array, neighbors: jax.Array,
                                       state)
         else:
             raise ValueError(f"bad mode {mode!r}")
-        pool_i, pool_d, _, hops = state
-        return pool_d[:k], pool_i[:k], hops
+        pool_i, pool_d, _, hops, gath, dup = state
+        return pool_d[:k], pool_i[:k], hops, gath, dup
 
-    return jax.vmap(one)(queries, entry_ids)
+    d, i, hops, gath, dup = jax.vmap(one)(queries, entry_ids)
+    if with_stats:
+        return d, i, BeamStats(hops, gath, dup)
+    return d, i, hops
 
 
 def _beam_search_batched(queries, db, neighbors, entry_ids, *, ef, k,
                          max_iters, mode, gather_dist, gather_backend,
-                         dist_backend="f32", codes=None, lut=None):
+                         dist_backend="f32", codes=None, lut=None,
+                         hop_backend=None, with_stats=False):
+    hop = resolve_hop_backend(hop_backend)
+    if gather_dist is not None and hop == "fused":
+        if hop_backend in (None, "auto"):
+            hop = "staged"    # custom distance callables are staged-only
+        else:
+            raise ValueError(
+                "hop_backend='fused' cannot honor a custom gather_dist "
+                "callable (distances are computed in-kernel)")
     if dist_backend != "f32":
         if codes is None or lut is None:
             raise ValueError(
@@ -212,7 +306,14 @@ def _beam_search_batched(queries, db, neighbors, entry_ids, *, ef, k,
         gd = gather_dist
     else:
         backend = resolve_gather_backend(gather_backend)
-        if backend is None:
+        if hop == "fused":
+            # the fused hop's in-kernel arithmetic is the diff-square form
+            # of kernels/gather_dist, not the dot-formula default: seed the
+            # pool from the same kernel family so the entry distances carry
+            # the bits the hops will reproduce
+            gd = functools.partial(_kernel_gather_dist,
+                                   backend=backend or "jnp")
+        elif backend is None:
             # vmap of the per-query fn lowers to the same batched dot_general
             # as the "vmap" layout traces — exact cross-layout agreement.
             gd = jax.vmap(_default_gather_dist, in_axes=(0, None, 0))
@@ -227,14 +328,22 @@ def _beam_search_batched(queries, db, neighbors, entry_ids, *, ef, k,
     pool_d = match_vma(pool_d, queries, db, neighbors, entry_ids)
     pool_v = match_vma(jnp.zeros((nq, ef), bool), queries, db, neighbors,
                        entry_ids)
-    hops = match_vma(jnp.zeros((nq,), jnp.int32), queries, db, neighbors,
-                     entry_ids)
-    state = (pool_i, pool_d, pool_v, hops)
+    zeros = match_vma(jnp.zeros((nq,), jnp.int32), queries, db, neighbors,
+                      entry_ids)
+    state = (pool_i, pool_d, pool_v, zeros, zeros, zeros)
 
-    body = lambda s: _expand_batch(s, queries, db, neighbors, gd)
+    if hop == "fused":
+        kb = resolve_gather_backend(gather_backend) or "jnp"
+        q_or_lut = queries if dist_backend == "f32" else lut
+        table = db if dist_backend == "f32" else codes
+        body = lambda s: _expand_fused(s, q_or_lut, table, neighbors,
+                                       dist_backend=dist_backend,
+                                       backend=kb)
+    else:
+        body = lambda s: _expand_batch(s, queries, db, neighbors, gd)
 
     def lane_cond(s):
-        i, d, v, h = s
+        i, d, v, h = s[0], s[1], s[2], s[3]
         return jnp.any((~v) & (i >= 0), axis=1) & (h < max_iters)
 
     if mode == "while":
@@ -256,7 +365,9 @@ def _beam_search_batched(queries, db, neighbors, entry_ids, *, ef, k,
         state = jax.lax.fori_loop(0, max_iters, lambda _, s: body(s), state)
     else:
         raise ValueError(f"bad mode {mode!r}")
-    pool_i, pool_d, _, hops = state
+    pool_i, pool_d, _, hops, gath, dup = state
+    if with_stats:
+        return pool_d[:, :k], pool_i[:, :k], BeamStats(hops, gath, dup)
     return pool_d[:, :k], pool_i[:, :k], hops
 
 

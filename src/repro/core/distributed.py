@@ -630,13 +630,15 @@ class ShardedFactoryIndex:
                  knn_backend: Optional[str] = None,
                  finish_backend: Optional[str] = None,
                  dist_backend: Optional[str] = None,
-                 rerank: Optional[int] = None):
+                 rerank: Optional[int] = None,
+                 hop_backend: Optional[str] = None):
         self.spec = spec
         self.n_shards = n_shards
         self.knn_backend = knn_backend         # per-shard build override
         self.finish_backend = finish_backend   # per-shard finish override
         self.dist_backend = dist_backend       # per-shard serving precision
         self.rerank = rerank                   # per-shard exact-rerank depth
+        self.hop_backend = hop_backend         # per-shard beam-hop backend
         self.subs: list = []
         # the max-degree shards fit() built: reprune always derives from
         # these (NOT from self.subs, which on a derived index are already
@@ -665,7 +667,8 @@ class ShardedFactoryIndex:
                         knn_backend=self.knn_backend,
                         finish_backend=self.finish_backend,
                         dist_backend=self.dist_backend,
-                        rerank=self.rerank)
+                        rerank=self.rerank,
+                        hop_backend=self.hop_backend)
             for i in range(self.n_shards)
         ]
         self._structural_subs = self.subs

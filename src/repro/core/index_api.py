@@ -64,6 +64,8 @@ class SearchParams:
                            NSG/TunedGraph with a ``core.quant`` codec
       * ``dist_backend`` — traversal precision ("f32" | "pq" | "int8"):
                            NSG/TunedGraph
+      * ``hop_backend``  — beam-hop fusion ("staged" | "fused" | "auto"):
+                           NSG/TunedGraph (kernels/beam_hop)
     """
     ef_search: Optional[int] = None
     nprobe: Optional[int] = None
@@ -71,6 +73,7 @@ class SearchParams:
     chunk: Optional[int] = None
     rerank: Optional[int] = None
     dist_backend: Optional[str] = None
+    hop_backend: Optional[str] = None
 
     def resolve(self, name: str, default):
         v = getattr(self, name)
@@ -83,7 +86,7 @@ class SearchParams:
 jax.tree_util.register_dataclass(
     SearchParams, data_fields=[],
     meta_fields=["ef_search", "nprobe", "mode", "chunk", "rerank",
-                 "dist_backend"])
+                 "dist_backend", "hop_backend"])
 
 
 def param_or(params: Optional[SearchParams], name: str, default):
@@ -259,7 +262,8 @@ def build_index(spec: str, data: jax.Array, *,
                 knn_backend: Optional[str] = None,
                 finish_backend: Optional[str] = None,
                 dist_backend: Optional[str] = None,
-                rerank: Optional[int] = None) -> Index:
+                rerank: Optional[int] = None,
+                hop_backend: Optional[str] = None) -> Index:
     """Build + fit an index from a factory string (the one-call entry point).
 
     ``knn_backend`` overrides the build-time kNN-graph backend ("exact" |
@@ -268,7 +272,9 @@ def build_index(spec: str, data: jax.Array, *,
     overrides the NSG finishing pass ("host" | "device" | "auto",
     ``core/build/finish.py``) the same way. ``dist_backend`` ("f32" | "pq" |
     "int8") and ``rerank`` override the quantized-traversal serving knobs
-    (in-grammar: ``,PQ<m>x8`` / ``,SQ8`` / ``,Rerank<k>``).
+    (in-grammar: ``,PQ<m>x8`` / ``,SQ8`` / ``,Rerank<k>``); ``hop_backend``
+    ("staged" | "fused" | "auto") the beam-hop fusion (in-grammar:
+    ``,HopStaged`` / ``,HopFused``).
 
     >>> idx = build_index("PCA16,IVF64", data)
     >>> dists, ids = idx.search(queries, 10, SearchParams(nprobe=4))
@@ -277,7 +283,8 @@ def build_index(spec: str, data: jax.Array, *,
     overrides = {k: v for k, v in (("knn_backend", knn_backend),
                                    ("finish_backend", finish_backend),
                                    ("dist_backend", dist_backend),
-                                   ("rerank", rerank))
+                                   ("rerank", rerank),
+                                   ("hop_backend", hop_backend))
                  if v is not None}
     if overrides:
         from dataclasses import replace as _replace
@@ -407,22 +414,24 @@ def _ensure_builtins():
     @register_index(
         "NSG", r"^NSG(\d+)?(?:a(\d+(?:\.\d+)?))?$",
         "NSG[<degree>][a<alpha>][,AH<keep>][,EP<k>][,ND<K>]"
-        "[,PQ<m>x8|,SQ8][,Rerank<k>]",
+        "[,PQ<m>x8|,SQ8][,Rerank<k>][,HopFused|,HopStaged]",
         examples=("NSG12", "NSG12,EP8", "NSG12,AH0.9,EP8",
                   "NSG12a1.2,ND16", "NSG12,PQ8x8,Rerank32",
-                  "NSG12,EP8,SQ8,Rerank32"))
+                  "NSG12,EP8,SQ8,Rerank32", "NSG12,EP8,HopFused"))
     def _nsg(m, rest, dim):
         degree = int(m.group(1)) if m.group(1) else 32
         alpha = float(m.group(2)) if m.group(2) else 1.0
         ep, keep, used = 1, 1.0, 0
         backend, knn_k = "auto", None
         dist_backend, pq_m, rerank = "f32", 0, 64
+        hop_backend = "auto"
         for tok in rest:
             em = re.match(r"^EP(\d+)$", tok)
             ah = re.match(r"^AH(0\.\d+|1(?:\.0+)?)$", tok)
             nd = re.match(r"^ND(\d+)?$", tok)
             pq = re.match(r"^PQ(\d+)x8$", tok)
             rr = re.match(r"^Rerank(\d+)$", tok)
+            hp = re.match(r"^Hop(Fused|Staged)$", tok)
             if em:
                 ep = int(em.group(1))
             elif ah:
@@ -437,6 +446,8 @@ def _ensure_builtins():
                 dist_backend = "int8"
             elif rr:
                 rerank = int(rr.group(1))
+            elif hp:
+                hop_backend = hp.group(1).lower()
             else:
                 break
             used += 1
@@ -445,7 +456,8 @@ def _ensure_builtins():
             graph_degree=degree, alpha=alpha,
             build_knn_k=knn_k if knn_k is not None else degree,
             build_candidates=max(2 * degree, 48), knn_backend=backend,
-            dist_backend=dist_backend, pq_m=pq_m, rerank=rerank)
+            dist_backend=dist_backend, pq_m=pq_m, rerank=rerank,
+            hop_backend=hop_backend)
         return TunedGraphIndex(params), used
 
     # only flag success: a failure above must surface again on retry, not

@@ -79,6 +79,11 @@ class IndexParams:
     dist_backend: str = "f32"
     pq_m: int = 0
     rerank: int = 64
+    # Beam-hop serving backend (core/beam_search): "staged" runs the hop
+    # as separate gather / distance / merge ops (the parity baseline),
+    # "fused" runs kernels/beam_hop (one Pallas launch per hop — the
+    # (Q, R) candidate block never touches HBM). "auto" = fused on TPU.
+    hop_backend: str = "auto"
 
     @staticmethod
     def from_config(cfg: ANNConfig) -> "IndexParams":
@@ -93,7 +98,8 @@ class IndexParams:
             finish_backend=getattr(cfg, "finish_backend", "auto"),
             dist_backend=getattr(cfg, "dist_backend", "f32"),
             pq_m=getattr(cfg, "pq_m", 0),
-            rerank=getattr(cfg, "rerank", 64))
+            rerank=getattr(cfg, "rerank", 64),
+            hop_backend=getattr(cfg, "hop_backend", "auto"))
 
 
 class TunedGraphIndex:
@@ -114,6 +120,7 @@ class TunedGraphIndex:
         self.codec = None                            # core.quant codec
         self.codes: Optional[jax.Array] = None       # (N, M) uint8 db codes
         self.codec_backend: Optional[str] = None     # "pq" | "int8"
+        self.last_search_stats = None                # BeamStats of last search
 
     # -- build ------------------------------------------------------------
     def fit(self, data: jax.Array, key: Optional[jax.Array] = None, *,
@@ -264,7 +271,8 @@ class TunedGraphIndex:
     def search(self, queries: jax.Array, k: int, params=None, *,
                ef: Optional[int] = None, mode: Optional[str] = None,
                rerank: Optional[int] = None,
-               dist_backend: Optional[str] = None):
+               dist_backend: Optional[str] = None,
+               hop_backend: Optional[str] = None):
         """Returns (dists (Q,k) in projected space, original ids (Q,k)).
 
         ``params`` is a ``core.index_api.SearchParams``; explicit keywords
@@ -273,7 +281,10 @@ class TunedGraphIndex:
         codes (one ``kernels/lut_dist`` call per hop) and the top
         ``rerank`` survivors are exactly rescored in f32 — the returned
         distances are exact for reranked entries, ADC approximations when
-        ``rerank=0``.
+        ``rerank=0``. ``hop_backend`` ("staged" | "fused" | "auto") picks
+        the per-hop execution (see ``IndexParams.hop_backend``). Per-hop
+        work counters of the latest call are kept on the index — read them
+        via ``search_stats()``.
         """
         assert self.graph is not None, "fit() first"
         if params is not None:
@@ -283,18 +294,23 @@ class TunedGraphIndex:
                 rerank = getattr(params, "rerank", None)
             if dist_backend is None:
                 dist_backend = getattr(params, "dist_backend", None)
+            if hop_backend is None:
+                hop_backend = getattr(params, "hop_backend", None)
         ef = ef or self.params.ef_search
         mode = mode or "while"
         dist_backend = dist_backend or self.params.dist_backend
         rerank = rerank if rerank is not None else self.params.rerank
+        hop_backend = hop_backend or self.params.hop_backend
         q = self.project(queries)
         entries = self.eps.select(q)
         if dist_backend == "f32":
             # batch-major layout: every hop is one (Q, R) gather_dist block
             # (Pallas kernel on TPU) — exact-parity with the vmap layout.
-            d, i, hops = beam_search(q, self.base, self.graph.neighbors,
-                                     entries, ef=max(ef, k), k=k, mode=mode,
-                                     layout="batched")
+            d, i, stats = beam_search(q, self.base, self.graph.neighbors,
+                                      entries, ef=max(ef, k), k=k, mode=mode,
+                                      layout="batched",
+                                      hop_backend=hop_backend,
+                                      with_stats=True)
         else:
             if self.codec is None or self.codec_backend != dist_backend:
                 self.quantize(dist_backend)
@@ -302,17 +318,37 @@ class TunedGraphIndex:
             # keep enough ADC-ranked survivors for the exact tail to pick
             # a true top-k from
             kb = min(max(rerank, k), max(ef, k))
-            d, i, hops = beam_search(q, self.base, self.graph.neighbors,
-                                     entries, ef=max(ef, k), k=kb, mode=mode,
-                                     layout="batched",
-                                     dist_backend=dist_backend,
-                                     codes=self.codes, lut=lut)
+            d, i, stats = beam_search(q, self.base, self.graph.neighbors,
+                                      entries, ef=max(ef, k), k=kb, mode=mode,
+                                      layout="batched",
+                                      dist_backend=dist_backend,
+                                      codes=self.codes, lut=lut,
+                                      hop_backend=hop_backend,
+                                      with_stats=True)
             if rerank > 0:
                 d, i = _exact_rerank(q, self.base, i, k)
             else:
                 d, i = d[:, :k], i[:, :k]
+        self.last_search_stats = stats
         orig = jnp.where(i >= 0, self.kept_idx[jnp.maximum(i, 0)], -1)
         return d, orig
+
+    def search_stats(self) -> Optional[dict]:
+        """Per-hop work counters of the latest ``search`` call.
+
+        ``hops`` — total frontier expansions across queries; ``gathered``
+        — total candidate rows pulled through the distance stage (valid
+        graph edges, pre-dedup); ``dup_gathered`` — how many of those were
+        already resident in the pool (wasted gathers). The staged and
+        fused hop backends count identically — work-parity assertions in
+        the tests compare these dicts across backends.
+        """
+        s = self.last_search_stats
+        if s is None:
+            return None
+        return {"hops": int(jnp.sum(s.hops)),
+                "gathered": int(jnp.sum(s.gathered)),
+                "dup_gathered": int(jnp.sum(s.dup_gathered))}
 
     @property
     def ntotal(self) -> int:

@@ -71,6 +71,11 @@ def default_space(dim: int, n: int, max_degree: int = 32,
     int8 = d' bytes, vs f32's 4*d') and ``rerank`` the exact-rescore depth.
     Fine-grained PQ code size rides on ``pca_dim`` — ``pq_m`` auto-tracks
     the projected dimensionality (core.quant.default_pq_m).
+
+    ``hop_backend`` is a pure serving knob (per-hop execution strategy:
+    staged ops vs the fused kernels/beam_hop launch) — like ef_search it
+    never forces a rebuild, so the tuner can let the QPS measurement pick
+    the winner per deployment target.
     """
     space = (SearchSpace()
              .add("pca_dim", Int(max(8, dim // 4), dim))
@@ -78,7 +83,8 @@ def default_space(dim: int, n: int, max_degree: int = 32,
              .add("graph_degree", Int(max(4, max_degree // 4), max_degree))
              .add("alpha", Float(1.0, 1.4))
              .add("ep_clusters", Int(1, max(2, min(256, n // 20)), log=True))
-             .add("ef_search", Int(16, 256, log=True)))
+             .add("ef_search", Int(16, 256, log=True))
+             .add("hop_backend", Categorical(("staged", "fused"))))
     if quantized:
         space = (space
                  .add("dist_backend", Categorical(("f32", "pq", "int8")))
@@ -243,7 +249,8 @@ class AnnObjective:
         idx, cached, repruned = self._get_index(p)
         build_s = time.perf_counter() - t0
         ef = max(p.ef_search, self.k)
-        kw = dict(ef=ef, dist_backend=p.dist_backend, rerank=p.rerank)
+        kw = dict(ef=ef, dist_backend=p.dist_backend, rerank=p.rerank,
+                  hop_backend=p.hop_backend)
         d, i = idx.search(self.queries, self.k, **kw)       # warmup+compile
         jax.block_until_ready(d)
         times = []

@@ -1,0 +1,5 @@
+from repro.kernels.beam_hop.beam_hop import beam_hop_pallas
+from repro.kernels.beam_hop.ops import beam_hop
+from repro.kernels.beam_hop.ref import beam_hop_ref, merge_one
+
+__all__ = ["beam_hop", "beam_hop_pallas", "beam_hop_ref", "merge_one"]

@@ -1,0 +1,177 @@
+"""Fused beam-hop Pallas TPU kernel: gather -> distance -> pool merge.
+
+One beam hop used to be three device round trips — gather the (Q, R)
+neighbor ids, score them (``kernels/gather_dist`` or ``kernels/lut_dist``),
+then merge into the (Q, ef) pool — with the candidate id and distance
+blocks spilled to HBM between stages. This kernel is the ROADMAP fusion:
+the per-query selected node id is scalar-prefetched, its graph row is
+DMA'd by a BlockSpec index_map, the R candidate rows (f32 vectors or uint8
+codes, picked by a static ``dist_backend``) are streamed HBM->VMEM with a
+double-buffered ``make_async_copy`` gather, distances accumulate in
+registers, and a bitonic dedup-merge against the resident pool writes the
+updated (ids, dists, visited) state — the (Q, R) block never touches HBM.
+
+Bit-exactness with ``ref.py`` (and therefore with the staged path) is by
+construction:
+
+  * f32 distances use the diff-square form of ``kernels/gather_dist``
+    (sum((q - x)^2) over a (1, D) block); PQ/int8 use ``kernels/lut_dist``'s
+    one-hot select + left-to-right accumulation over M;
+  * the merge sorts lanes by the lexicographic (distance, input position)
+    key, which reproduces the reference's single *stable* argsort exactly —
+    including +inf padding ties — via the strict-comparator bitonic network
+    shared with ``kernels/topk_merge``.
+
+Grid: (Q,) — one query's full hop per step; queries pipeline across steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+from repro.kernels.bitonic import bitonic_by, pow2_at_least
+
+
+def _stable_gt(self_t, part_t):
+    """Strict (dist, position) comparator == stable sort by distance."""
+    sd, sp = self_t[0], self_t[1]
+    pd, pp = part_t[0], part_t[1]
+    return (sd > pd) | ((sd == pd) & (sp > pp))
+
+
+def _beam_hop_kernel(sel_ref, nbr_ref, pi_ref, pd_ref, pv_ref, q_ref,
+                     tab_ref, opi_ref, opd_ref, opv_ref, stats_ref,
+                     rows, dists, sem, *, dist_backend: str, r: int,
+                     ef: int, pad: int):
+    i = pl.program_id(0)
+    active = sel_ref[i] >= 0
+    nbr = nbr_ref[0, :]                           # graph row of sel (clamped)
+    valid = (nbr >= 0) & active                   # (R,)
+    safe = jnp.where(valid, nbr, 0)
+
+    def start(slot, j):
+        pltpu.make_async_copy(tab_ref.at[safe[j]], rows.at[slot],
+                              sem.at[slot]).start()
+
+    start(0, 0)
+
+    def body(j, carry):
+        slot = j % 2
+
+        @pl.when(j + 1 < r)
+        def _():
+            start((j + 1) % 2, j + 1)
+
+        pltpu.make_async_copy(tab_ref.at[safe[j]], rows.at[slot],
+                              sem.at[slot]).wait()
+        row = rows[slot]
+        if dist_backend == "f32":
+            q = q_ref[...].astype(jnp.float32)            # (1, D)
+            x = row[None, :].astype(jnp.float32)          # (1, D)
+            diff = q - x
+            dists[0, j] = jnp.sum(diff * diff)
+        else:
+            m, c = q_ref.shape[1], q_ref.shape[2]
+            code = row.reshape(m, 1).astype(jnp.int32)    # (M, 1)
+            iota = jax.lax.broadcasted_iota(jnp.int32, (m, c), 1)
+            sel_v = jnp.where(iota == code, q_ref[0], 0.0)
+            per_m = jnp.sum(sel_v, axis=1)
+            acc = per_m[0]
+            for mm in range(1, m):
+                acc = acc + per_m[mm]
+            dists[0, j] = acc
+        return carry
+
+    jax.lax.fori_loop(0, r, body, 0)
+
+    nd = jnp.where(valid, dists[0, :], jnp.inf)
+    cand_i = jnp.where(valid, safe, -1)
+    dup = jnp.any(cand_i[:, None] == pi_ref[0][None, :], axis=1)
+    n_dup = jnp.sum(dup & (cand_i >= 0), dtype=jnp.int32)
+    bad = dup | (cand_i < 0)
+    cand_i = jnp.where(bad, -1, cand_i)
+    nd = jnp.where(bad, jnp.inf, nd)
+
+    ids = jnp.concatenate(
+        [pi_ref[0], cand_i, jnp.full((pad,), -1, jnp.int32)])[None, :]
+    ds = jnp.concatenate(
+        [pd_ref[0], nd, jnp.full((pad,), jnp.inf, jnp.float32)])[None, :]
+    vis = jnp.concatenate(
+        [pv_ref[0], jnp.zeros((r + pad,), bool)])[None, :]
+    pos = jax.lax.broadcasted_iota(jnp.int32, ids.shape, 1)
+    ds, pos, ids, vis = bitonic_by((ds, pos, ids, vis), _stable_gt,
+                                    ids.shape[1])
+    opi_ref[...] = ids[:, :ef]
+    opd_ref[...] = ds[:, :ef]
+    opv_ref[...] = vis[:, :ef]
+    stats_ref[0, 0] = jnp.sum(valid, dtype=jnp.int32)
+    stats_ref[0, 1] = n_dup
+
+
+@functools.partial(jax.jit, static_argnames=("dist_backend", "interpret"))
+def beam_hop_pallas(sel: jax.Array, neighbors: jax.Array, pool_i: jax.Array,
+                    pool_d: jax.Array, pool_v: jax.Array,
+                    q_or_lut: jax.Array, table: jax.Array,
+                    dist_backend: str = "f32",
+                    interpret: bool = True):
+    """One fused hop over all Q lanes; see ``ref.beam_hop_ref`` for shapes.
+
+    ``table`` ((N, D) f32 db or (N, M) uint8 codes) stays in ANY memory
+    space; the kernel DMAs exactly the R needed rows per query. Inactive
+    lanes (sel < 0) index row 0 for the graph-row prefetch and mask every
+    candidate, so their pool state passes through unchanged (up to the
+    already-applied visited mark).
+    """
+    nq, ef = pool_i.shape
+    r = neighbors.shape[1]
+    pad = pow2_at_least(max(ef + r, 2)) - (ef + r)
+    if dist_backend == "f32":
+        q_spec = pl.BlockSpec((1, q_or_lut.shape[1]),
+                              lambda i, s: (i, 0))
+    else:
+        q_spec = pl.BlockSpec((1,) + q_or_lut.shape[1:],
+                              lambda i, s: (i, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nq,),
+        in_specs=[
+            pl.BlockSpec((1, r), lambda i, s: (jnp.maximum(s[i], 0), 0)),
+            pl.BlockSpec((1, ef), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, ef), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, ef), lambda i, s: (i, 0)),
+            q_spec,
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ef), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, ef), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, ef), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i, s: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, table.shape[1]), table.dtype),
+            pltpu.VMEM((1, r), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    kernel = functools.partial(_beam_hop_kernel, dist_backend=dist_backend,
+                               r=r, ef=ef, pad=pad)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, ef), jnp.int32),
+            jax.ShapeDtypeStruct((nq, ef), jnp.float32),
+            jax.ShapeDtypeStruct((nq, ef), jnp.bool_),
+            jax.ShapeDtypeStruct((nq, 2), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(sel, neighbors, pool_i, pool_d, pool_v, q_or_lut, table)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the fused beam hop, plus the pool merge it shares
+with the staged traversal path.
+
+``merge_one`` is the single-query candidate->pool merge that used to live
+privately in ``core/beam_search`` (``_merge``): both the staged expansion
+(which vmaps it) and this oracle call the SAME function, so fused-vs-staged
+bit-parity never depends on two copies staying in sync.
+
+``beam_hop_ref`` composes one hop exactly the way the staged path does —
+``gather_dist_ref`` / ``lut_dist_ref`` arithmetic (the diff-square and
+left-to-right LUT forms the Pallas kernels pin) followed by the merge — so
+it is simultaneously the jnp serving path of ``ops.beam_hop`` and the
+bit-exactness oracle for ``beam_hop_pallas``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_dist.ref import gather_dist_ref
+from repro.kernels.lut_dist.ref import lut_dist_ref
+
+
+def merge_one(pool_i, pool_d, pool_v, cand_i, cand_d):
+    """Merge (R,) candidates into one sorted (ef,) pool; dedup against pool.
+
+    Returns the updated (ids, dists, visited) triple plus the number of
+    valid candidates that were already pool-resident (the duplicate-gather
+    count — distance work the approximate visited set failed to skip).
+    """
+    dup = jnp.any(cand_i[:, None] == pool_i[None, :], axis=1)
+    n_dup = jnp.sum(dup & (cand_i >= 0), dtype=jnp.int32)
+    bad = dup | (cand_i < 0)
+    cand_i = jnp.where(bad, -1, cand_i)
+    cand_d = jnp.where(bad, jnp.inf, cand_d)
+    ids = jnp.concatenate([pool_i, cand_i])
+    ds = jnp.concatenate([pool_d, cand_d])
+    vis = jnp.concatenate([pool_v, jnp.zeros(cand_i.shape, bool)])
+    order = jnp.argsort(ds)[: pool_i.shape[0]]
+    return ids[order], ds[order], vis[order], n_dup
+
+
+@functools.partial(jax.jit, static_argnames=("dist_backend",))
+def beam_hop_ref(sel, neighbors, pool_i, pool_d, pool_v, q_or_lut, table,
+                 dist_backend: str = "f32"):
+    """One fused hop: neighbor gather -> distances -> pool merge.
+
+    sel (Q,) int32 selected nodes (-1 = lane inactive this hop);
+    neighbors (N, R) int32 (-1 padded); pool_* (Q, ef) with the frontier
+    slot already marked visited. ``dist_backend="f32"``: q_or_lut is the
+    (Q, D) queries and table the (N, D) db; "pq"/"int8": q_or_lut is the
+    (Q, M, C) LUT and table the (N, M) uint8 codes.
+
+    Returns (pool_i, pool_d, pool_v, stats) with stats (Q, 2) int32 =
+    [neighbor rows gathered, duplicate gathers] per query.
+    """
+    active = sel >= 0
+    nbr = neighbors[jnp.maximum(sel, 0)]                      # (Q, R)
+    valid = (nbr >= 0) & active[:, None]
+    safe = jnp.where(valid, nbr, 0)
+    if dist_backend == "f32":
+        nd = gather_dist_ref(q_or_lut, table, safe)
+    else:
+        nd = lut_dist_ref(q_or_lut, table, safe)
+    nd = jnp.where(valid, nd, jnp.inf)
+    pool_i, pool_d, pool_v, n_dup = jax.vmap(merge_one)(
+        pool_i, pool_d, pool_v, jnp.where(valid, safe, -1), nd)
+    stats = jnp.stack(
+        [jnp.sum(valid, axis=1, dtype=jnp.int32), n_dup], axis=1)
+    return pool_i, pool_d, pool_v, stats

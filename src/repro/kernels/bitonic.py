@@ -1,0 +1,55 @@
+"""Bitonic sorting-network building blocks shared by the Pallas kernels.
+
+`lax.sort` does not lower inside Pallas TPU kernels, so every in-kernel
+sort (``topk_merge``'s dedup-top-k, ``beam_hop``'s pool merge) is a bitonic
+network over VMEM-resident lane blocks. The compare-exchange partner
+``i XOR j`` (j a power of two) is a reshape-flip — no gathers, only
+reshapes, selects and iotas, all of which lower on TPU.
+
+This module has no intra-repo imports on purpose: kernel packages can pull
+it in without touching ``core`` (whose import graph reaches back into the
+kernel packages' dispatchers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xor_partner(x, j):
+    """Lanes i and i^j exchanged (j a power of two) via reshape + flip."""
+    b, m = x.shape
+    y = x.reshape(b, m // (2 * j), 2, j)
+    return jnp.flip(y, axis=2).reshape(b, m)
+
+
+def bitonic_by(arrays, gt_fn, m):
+    """Bitonic-sort (B, m) lane tuples ascending by a strict comparator.
+
+    ``gt_fn(self_tuple, partner_tuple) -> bool (B, m)`` must be a strict
+    "self sorts after partner" predicate (False on equal keys: equal-key
+    lanes never swap, so payload fields not in the key ride along).
+    """
+    lane = jax.lax.broadcasted_iota(jnp.int32, arrays[0].shape, 1)
+    ksz = 2
+    while ksz <= m:
+        j = ksz // 2
+        while j >= 1:
+            partners = tuple(xor_partner(a, j) for a in arrays)
+            gt_sp = gt_fn(arrays, partners)        # self > partner
+            gt_ps = xor_partner(gt_sp, j)          # partner-side verdict
+            lo = (lane & j) == 0                   # lane is the pair's low i
+            asc = (lane & ksz) == 0                # ascending sub-sequence
+            take = jnp.where(lo == asc, gt_sp, gt_ps)
+            arrays = tuple(jnp.where(take, p, a)
+                           for a, p in zip(arrays, partners))
+            j //= 2
+        ksz *= 2
+    return arrays
+
+
+def pow2_at_least(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p

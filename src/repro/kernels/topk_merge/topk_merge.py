@@ -38,40 +38,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import tpu_compiler_params
+from repro.kernels.bitonic import bitonic_by as _bitonic_by
+from repro.kernels.bitonic import pow2_at_least as _pow2_at_least
+from repro.kernels.bitonic import xor_partner as _xor_partner  # noqa: F401
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
-
-
-def _xor_partner(x, j):
-    """Lanes i and i^j exchanged (j a power of two) via reshape + flip."""
-    b, m = x.shape
-    y = x.reshape(b, m // (2 * j), 2, j)
-    return jnp.flip(y, axis=2).reshape(b, m)
-
-
-def _bitonic_by(arrays, gt_fn, m):
-    """Bitonic-sort (B, m) lane tuples ascending by a strict comparator.
-
-    ``gt_fn(self_tuple, partner_tuple) -> bool (B, m)`` must be a strict
-    "self sorts after partner" predicate (False on equal keys: equal-key
-    lanes never swap, so payload fields not in the key ride along).
-    """
-    lane = jax.lax.broadcasted_iota(jnp.int32, arrays[0].shape, 1)
-    ksz = 2
-    while ksz <= m:
-        j = ksz // 2
-        while j >= 1:
-            partners = tuple(_xor_partner(a, j) for a in arrays)
-            gt_sp = gt_fn(arrays, partners)        # self > partner
-            gt_ps = _xor_partner(gt_sp, j)         # partner-side verdict
-            lo = (lane & j) == 0                   # lane is the pair's low i
-            asc = (lane & ksz) == 0                # ascending sub-sequence
-            take = jnp.where(lo == asc, gt_sp, gt_ps)
-            arrays = tuple(jnp.where(take, p, a)
-                           for a, p in zip(arrays, partners))
-            j //= 2
-        ksz *= 2
-    return arrays
 
 
 def _dedup_gt(self_t, part_t):
@@ -108,13 +79,6 @@ def _topk_merge_kernel(ci_ref, cd_ref, cf_ref, oi_ref, od_ref, of_ref, *,
     oi_ref[...] = out_i
     od_ref[...] = ds[:, :k]
     of_ref[...] = fresh[:, :k] & (out_i >= 0)
-
-
-def _pow2_at_least(x: int) -> int:
-    p = 1
-    while p < x:
-        p *= 2
-    return p
 
 
 @functools.partial(jax.jit,

@@ -62,6 +62,12 @@ def main():
     ap.add_argument("--rerank", type=int, default=None,
                     help="exact-rerank depth of the quantized beam tail "
                          "(ann family only); ,Rerank<k> in-grammar")
+    ap.add_argument("--hop-backend", default=None,
+                    choices=["staged", "fused", "auto"],
+                    help="beam-hop serving backend for graph specs (ann "
+                         "family only): staged ops or the fused "
+                         "kernels/beam_hop launch; ,HopFused / ,HopStaged "
+                         "in-grammar")
     args = ap.parse_args()
     spec = get_arch(args.arch)
     cfg = spec.smoke_config
@@ -107,7 +113,8 @@ def main():
                           knn_backend=args.knn_backend,
                           finish_backend=args.finish_backend,
                           dist_backend=args.dist_backend,
-                          rerank=args.rerank)
+                          rerank=args.rerank,
+                          hop_backend=args.hop_backend)
         if args.buckets == "off":
             buckets = None
         elif args.buckets == "auto":

@@ -108,6 +108,13 @@ def main():
     ap.add_argument("--rerank", type=int, default=None,
                     help="exact-rerank depth of the quantized beam tail "
                          "(SearchParams.rerank / IndexParams.rerank)")
+    ap.add_argument("--hop-backend", default=None,
+                    choices=["staged", "fused", "auto"],
+                    help="beam-hop serving backend (core.beam_search): "
+                         "staged gather/distance/merge ops, or the fused "
+                         "kernels/beam_hop launch; auto = fused on TPU. "
+                         "Without --spec the knob is tuned (it is in "
+                         "default_space); this pins it instead")
     ap.add_argument("--offload", action="store_true",
                     help="with --shards (no --spec): force the host-offload "
                          "streamed tier even when the mesh has enough "
@@ -132,7 +139,8 @@ def main():
                                   knn_backend=args.knn_backend,
                                   finish_backend=args.finish_backend,
                                   dist_backend=args.dist_backend,
-                                  rerank=args.rerank).fit(
+                                  rerank=args.rerank,
+                                  hop_backend=args.hop_backend).fit(
             data, key=key)
         obj = ShardedRepruneObjective(idx, data, queries, k=10,
                                       recall_floor=args.recall_floor,
@@ -140,13 +148,15 @@ def main():
         space = obj.space
     elif args.spec:
         index = args.spec
-        if args.dist_backend is not None or args.rerank is not None:
+        if (args.dist_backend is not None or args.rerank is not None
+                or args.hop_backend is not None):
             from repro.core.index_api import build_index
             index = build_index(args.spec, data, key=key,
                                 knn_backend=args.knn_backend,
                                 finish_backend=args.finish_backend,
                                 dist_backend=args.dist_backend,
-                                rerank=args.rerank)
+                                rerank=args.rerank,
+                                hop_backend=args.hop_backend)
         obj = SearchParamsObjective(index, data, queries, k=10,
                                     recall_floor=args.recall_floor,
                                     qps_repeats=3, key=key)
@@ -210,7 +220,8 @@ def main():
                            finish_backend=args.finish_backend,
                            dist_backend=args.dist_backend or "f32",
                            rerank=args.rerank if args.rerank is not None
-                           else 64)
+                           else 64,
+                           hop_backend=args.hop_backend or "auto")
         obj = AnnObjective(data, queries, k=10, base_params=base,
                            recall_floor=args.recall_floor, qps_repeats=3)
         space = default_space(args.dim, args.n,

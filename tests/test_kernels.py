@@ -247,6 +247,157 @@ def test_topk_merge_backend_dispatch():
         resolve_merge_backend("bogus")
 
 
+# ---------------------------------------------------------------- beam_hop
+def _hop_inputs(seed, nq=10, n=300, d=16, r=8, ef=16):
+    """Random mid-search hop state: pools with inf-padded empty lanes, some
+    visited marks, and a few inactive (sel < 0) queries."""
+    keys = [jax.random.PRNGKey(seed + i) for i in range(7)]
+    db = jax.random.normal(keys[0], (n, d))
+    nbrs = jax.random.randint(keys[1], (n, r), -1, n)
+    pi = jax.random.randint(keys[2], (nq, ef), -1, n)
+    pd = jnp.where(pi >= 0, jax.random.uniform(keys[3], (nq, ef)) * 20,
+                   jnp.inf)
+    pv = (pi < 0) | (jax.random.uniform(keys[4], (nq, ef)) < 0.3)
+    sel = jnp.where(jnp.arange(nq) % 3 == 0, -1,
+                    jax.random.randint(keys[5], (nq,), 0, n))
+    q = jax.random.normal(keys[6], (nq, d))
+    return sel, nbrs, pi, pd, pv, q, db
+
+
+@pytest.mark.parametrize("dist_backend", ["f32", "pq"])
+def test_beam_hop_pallas_bitexact_vs_ref(dist_backend):
+    """One fused hop: the Pallas kernel (interpret) reproduces the jnp ref
+    bit-for-bit — ids, distances, visited marks AND work counters."""
+    from repro.kernels.beam_hop import beam_hop_pallas, beam_hop_ref
+
+    sel, nbrs, pi, pd, pv, q, db = _hop_inputs(3)
+    if dist_backend == "pq":
+        m, c = 4, 16
+        table = jax.random.randint(jax.random.PRNGKey(11),
+                                   (db.shape[0], m), 0, c).astype(jnp.uint8)
+        q = jax.random.uniform(jax.random.PRNGKey(12), (q.shape[0], m, c))
+        db = table
+    ref = beam_hop_ref(sel, nbrs, pi, pd, pv, q, db,
+                       dist_backend=dist_backend)
+    out = beam_hop_pallas(sel, nbrs, pi, pd, pv, q, db,
+                          dist_backend=dist_backend, interpret=True)
+    for r_, o_ in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(r_), np.asarray(o_))
+
+
+_HOP_CODECS = {}
+
+
+def _hop_codec(idx, backend):
+    """Per-(index, backend) codec cache: one k-means fit per dist backend."""
+    key = (id(idx), backend)
+    if key not in _HOP_CODECS:
+        from repro.core.quant import make_codec
+        # m=8 keeps the PQ k-means fit cheap; parity is m-agnostic
+        codec = make_codec(backend, idx.base.shape[1], 8)
+        codec.fit(idx.base, key=jax.random.PRNGKey(5))
+        codes = getattr(codec, "codes", None)
+        codes = codec.encode(idx.base) if codes is None else codes
+        _HOP_CODECS[key] = (codec, codes)
+    return _HOP_CODECS[key]
+
+
+@pytest.mark.parametrize("mode", ["while", "fori"])
+@pytest.mark.parametrize("dist_backend", ["f32", "pq", "int8"])
+def test_fused_hop_bitexact_vs_staged(small_nsg, ann_data, dist_backend,
+                                      mode):
+    """Full traversal, fused vs staged, every dist backend x loop mode:
+    ids, distances and all three work counters are bitwise identical.
+    Both fused flavours run — 'jnp' (the ref) and 'pallas' (the kernel,
+    interpret mode). The staged baseline uses gather_backend='jnp', whose
+    diff-square arithmetic is the form the fused kernel computes (the
+    default dot-formula gather is NOT bit-reproducible in-kernel)."""
+    from repro.core.beam_search import beam_search
+
+    idx = small_nsg
+    q = idx.project(ann_data["queries"][:8])
+    e = idx.eps.select(q)
+    kw = dict(ef=16, k=8, max_iters=48, mode=mode, layout="batched",
+              with_stats=True)
+    if dist_backend != "f32":
+        codec, codes = _hop_codec(idx, dist_backend)
+        kw.update(dist_backend=dist_backend, codes=codes, lut=codec.lut(q))
+    args = (q, idx.base, idx.graph.neighbors, e)
+    ds, is_, ss = beam_search(*args, hop_backend="staged",
+                              gather_backend="jnp", **kw)
+    for flavour in ("jnp", "pallas"):
+        df, if_, sf = beam_search(*args, hop_backend="fused",
+                                  gather_backend=flavour, **kw)
+        np.testing.assert_array_equal(np.asarray(is_), np.asarray(if_))
+        np.testing.assert_array_equal(np.asarray(ds), np.asarray(df))
+        for a, b in zip(ss, sf):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_hop_matches_vmap_layout_diffsq(small_nsg, ann_data):
+    """The fused hop agrees with the per-query vmap layout when the latter
+    scores with the same diff-square arithmetic the kernel uses."""
+    from repro.core.beam_search import beam_search
+
+    def _diffsq(query, db, ids):
+        rows = db[jnp.maximum(ids, 0)].astype(jnp.float32)
+        d = jnp.sum((rows - query.astype(jnp.float32)) ** 2, -1)
+        return jnp.where(ids >= 0, d, jnp.inf)
+
+    idx = small_nsg
+    q = idx.project(ann_data["queries"][:8])
+    e = idx.eps.select(q)
+    kw = dict(ef=16, k=8, max_iters=48, mode="fori")
+    dv, iv, _ = beam_search(q, idx.base, idx.graph.neighbors, e,
+                            layout="vmap", gather_dist=_diffsq, **kw)
+    df, if_, _ = beam_search(q, idx.base, idx.graph.neighbors, e,
+                             layout="batched", hop_backend="fused",
+                             gather_backend="jnp", **kw)
+    np.testing.assert_array_equal(np.asarray(iv), np.asarray(if_))
+    np.testing.assert_array_equal(np.asarray(dv), np.asarray(df))
+
+
+def test_fused_rejects_custom_gather_and_vmap_layout(small_nsg, ann_data):
+    from repro.core.beam_search import beam_search
+    idx = small_nsg
+    q = idx.project(ann_data["queries"][:4])
+    e = idx.eps.select(q)
+    kw = dict(ef=16, k=8, max_iters=16, mode="fori")
+    with pytest.raises(ValueError, match="vmap layout is always staged"):
+        beam_search(q, idx.base, idx.graph.neighbors, e, layout="vmap",
+                    hop_backend="fused", **kw)
+    with pytest.raises(ValueError, match="custom gather_dist"):
+        beam_search(q, idx.base, idx.graph.neighbors, e, layout="batched",
+                    hop_backend="fused",
+                    gather_dist=lambda a, b, c: jnp.zeros(()), **kw)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), ef=st.sampled_from([12, 24, 40]))
+    def test_fused_recall_equals_staged_property(small_nsg, ann_data, seed,
+                                                 ef):
+        """Recall@10 of the fused hop equals the staged hop's on fresh
+        query draws at any beam width (bit-parity implies it; this checks
+        the claim end-to-end through ground truth)."""
+        from repro.core.beam_search import beam_search
+        from repro.core.flat import FlatIndex, recall_at_k
+        from repro.data import queries_like
+
+        idx = small_nsg
+        data = ann_data["data"]
+        q = queries_like(jax.random.PRNGKey(seed), data, 8)
+        _, ti = FlatIndex(data).search(q, 10)
+        e = idx.eps.select(q)
+        kw = dict(ef=max(ef, 10), k=10, max_iters=96, mode="while",
+                  layout="batched", gather_backend="jnp")
+        _, i_st, _ = beam_search(q, idx.base, idx.graph.neighbors, e,
+                                 hop_backend="staged", **kw)
+        _, i_fu, _ = beam_search(q, idx.base, idx.graph.neighbors, e,
+                                 hop_backend="fused", **kw)
+        assert recall_at_k(i_fu, ti) == recall_at_k(i_st, ti)
+
+
 @pytest.mark.slow
 def test_nn_descent_merge_backends_agree(ann_data):
     """The whole NN-Descent build is bit-identical across merge backends
