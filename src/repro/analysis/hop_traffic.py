@@ -118,3 +118,49 @@ def hop_traffic_report(ef: int, r: int, dim: int,
         "spill_reduction_vs_staged": round(st.spilled / fu.spilled, 3),
         "total_reduction_vs_staged": round(st.total / fu.total, 3),
     }
+
+
+def traversal_savings_report(stats: dict, ef: int, r: int, dim: int,
+                             dist_backend: str = "f32", pq_m: int = 0,
+                             pq_c: int = 256, hop_backend: str = "staged",
+                             baseline_stats: dict = None) -> dict:
+    """Price a traversal's straggler waste in modeled HBM bytes.
+
+    ``stats`` is a ``TunedGraphIndex.search_stats()`` dict. ``hops`` hops
+    did real work; ``wasted_hops`` are lock-stepped no-op hops the batch
+    executed for lanes that had already converged — every one of them moves
+    the full per-hop byte bill for zero pool change. Compaction shrinks the
+    wasted count by re-packing survivors into smaller batches; adaptive
+    termination (patience/eps) shrinks the useful count by stopping lanes
+    before full-pool convergence. Pass the ``patience=None`` run's stats as
+    ``baseline_stats`` to get the cross-run reduction ratios the ISSUE
+    gate (>= 1.3x fewer total hops) is checked against.
+    """
+    traffic = (fused_hop_traffic if hop_backend == "fused"
+               else staged_hop_traffic)(ef, r, dim, dist_backend, pq_m, pq_c)
+    useful = int(stats["hops"])
+    wasted = int(stats["wasted_hops"])
+    launched = useful + wasted
+    report = {
+        "ef": ef, "r": r, "dim": dim, "dist_backend": dist_backend,
+        "hop_backend": hop_backend,
+        "bytes_per_hop": traffic.total,
+        "useful_hops": useful,
+        "wasted_hops": wasted,
+        "launched_hops": launched,
+        "active_fraction": round(useful / max(launched, 1), 4),
+        "useful_bytes": useful * traffic.total,
+        "wasted_bytes": wasted * traffic.total,
+    }
+    if baseline_stats is not None:
+        base_useful = int(baseline_stats["hops"])
+        base_launched = base_useful + int(baseline_stats["wasted_hops"])
+        report["baseline_useful_hops"] = base_useful
+        report["baseline_launched_hops"] = base_launched
+        report["hop_reduction_vs_baseline"] = round(
+            base_useful / max(useful, 1), 3)
+        report["launched_reduction_vs_baseline"] = round(
+            base_launched / max(launched, 1), 3)
+        report["bytes_saved_vs_baseline"] = (
+            (base_launched - launched) * traffic.total)
+    return report

@@ -166,6 +166,9 @@ class ANNConfig:
     pq_m: int = 0                    # PQ sub-quantizers (0 = auto by dim)
     rerank: int = 64                 # exact-rerank depth of quantized tail
     hop_backend: str = "auto"        # staged | fused | auto (beam hop)
+    patience: int = 0                # adaptive-termination hops (0 = off)
+    eps: float = 0.0                 # top-k progress threshold for patience
+    compact_every: int = 0           # compaction slice length (0 = off)
     dtype: str = "float32"
 
 

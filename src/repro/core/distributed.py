@@ -631,7 +631,10 @@ class ShardedFactoryIndex:
                  finish_backend: Optional[str] = None,
                  dist_backend: Optional[str] = None,
                  rerank: Optional[int] = None,
-                 hop_backend: Optional[str] = None):
+                 hop_backend: Optional[str] = None,
+                 patience: Optional[int] = None,
+                 eps: Optional[float] = None,
+                 compact_every: Optional[int] = None):
         self.spec = spec
         self.n_shards = n_shards
         self.knn_backend = knn_backend         # per-shard build override
@@ -639,6 +642,9 @@ class ShardedFactoryIndex:
         self.dist_backend = dist_backend       # per-shard serving precision
         self.rerank = rerank                   # per-shard exact-rerank depth
         self.hop_backend = hop_backend         # per-shard beam-hop backend
+        self.patience = patience               # per-shard adaptive patience
+        self.eps = eps                         # per-shard progress threshold
+        self.compact_every = compact_every     # per-shard compaction slice
         self.subs: list = []
         # the max-degree shards fit() built: reprune always derives from
         # these (NOT from self.subs, which on a derived index are already
@@ -668,7 +674,10 @@ class ShardedFactoryIndex:
                         finish_backend=self.finish_backend,
                         dist_backend=self.dist_backend,
                         rerank=self.rerank,
-                        hop_backend=self.hop_backend)
+                        hop_backend=self.hop_backend,
+                        patience=self.patience,
+                        eps=self.eps,
+                        compact_every=self.compact_every)
             for i in range(self.n_shards)
         ]
         self._structural_subs = self.subs

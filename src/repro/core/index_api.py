@@ -66,6 +66,10 @@ class SearchParams:
                            NSG/TunedGraph
       * ``hop_backend``  — beam-hop fusion ("staged" | "fused" | "auto"):
                            NSG/TunedGraph (kernels/beam_hop)
+      * ``patience`` / ``eps`` — adaptive early termination (0 = stock
+                           full-pool convergence): NSG/TunedGraph
+      * ``compact_every`` — active-query compaction slice length (0 = the
+                           plain batched driver): NSG/TunedGraph
     """
     ef_search: Optional[int] = None
     nprobe: Optional[int] = None
@@ -74,6 +78,9 @@ class SearchParams:
     rerank: Optional[int] = None
     dist_backend: Optional[str] = None
     hop_backend: Optional[str] = None
+    patience: Optional[int] = None
+    eps: Optional[float] = None
+    compact_every: Optional[int] = None
 
     def resolve(self, name: str, default):
         v = getattr(self, name)
@@ -86,7 +93,8 @@ class SearchParams:
 jax.tree_util.register_dataclass(
     SearchParams, data_fields=[],
     meta_fields=["ef_search", "nprobe", "mode", "chunk", "rerank",
-                 "dist_backend", "hop_backend"])
+                 "dist_backend", "hop_backend", "patience", "eps",
+                 "compact_every"])
 
 
 def param_or(params: Optional[SearchParams], name: str, default):
@@ -117,6 +125,19 @@ def rerank_space(space: Optional["SearchSpace"] = None, low: int = 8,
     from repro.core.tuning.space import Int, SearchSpace
     space = space if space is not None else SearchSpace()
     return space.add("rerank", Int(low, high, log=True))
+
+
+def patience_space(space: Optional["SearchSpace"] = None,
+                   high: int = 16) -> "SearchSpace":
+    """Adaptive-termination fragment for graph-traversal indexes.
+
+    ``patience=0`` disables the rule (stock full-pool convergence), so the
+    tuner can discover whether trading straggler hops for recall pays at
+    the deployment's recall floor rather than having it hard-coded.
+    """
+    from repro.core.tuning.space import Int, SearchSpace
+    space = space if space is not None else SearchSpace()
+    return space.add("patience", Int(0, high))
 
 
 def nprobe_space(n_lists: int) -> "SearchSpace":
@@ -263,7 +284,10 @@ def build_index(spec: str, data: jax.Array, *,
                 finish_backend: Optional[str] = None,
                 dist_backend: Optional[str] = None,
                 rerank: Optional[int] = None,
-                hop_backend: Optional[str] = None) -> Index:
+                hop_backend: Optional[str] = None,
+                patience: Optional[int] = None,
+                eps: Optional[float] = None,
+                compact_every: Optional[int] = None) -> Index:
     """Build + fit an index from a factory string (the one-call entry point).
 
     ``knn_backend`` overrides the build-time kNN-graph backend ("exact" |
@@ -274,7 +298,9 @@ def build_index(spec: str, data: jax.Array, *,
     "int8") and ``rerank`` override the quantized-traversal serving knobs
     (in-grammar: ``,PQ<m>x8`` / ``,SQ8`` / ``,Rerank<k>``); ``hop_backend``
     ("staged" | "fused" | "auto") the beam-hop fusion (in-grammar:
-    ``,HopStaged`` / ``,HopFused``).
+    ``,HopStaged`` / ``,HopFused``); ``patience`` / ``eps`` /
+    ``compact_every`` the straggler-control knobs (in-grammar:
+    ``,Adapt<p>[c<n>]`` — patience=0 / compact_every=0 disable).
 
     >>> idx = build_index("PCA16,IVF64", data)
     >>> dists, ids = idx.search(queries, 10, SearchParams(nprobe=4))
@@ -284,7 +310,10 @@ def build_index(spec: str, data: jax.Array, *,
                                    ("finish_backend", finish_backend),
                                    ("dist_backend", dist_backend),
                                    ("rerank", rerank),
-                                   ("hop_backend", hop_backend))
+                                   ("hop_backend", hop_backend),
+                                   ("patience", patience),
+                                   ("eps", eps),
+                                   ("compact_every", compact_every))
                  if v is not None}
     if overrides:
         from dataclasses import replace as _replace
@@ -370,6 +399,18 @@ def _ensure_builtins():
     from repro.core.pipeline import IndexParams, TunedGraphIndex
     from repro.core.pq import PQIndex
 
+    def _check_pq_m(pq_m: int, dim: int, tok: str) -> None:
+        # Catch the silent-recall-killer at parse time: a PQ subquantizer
+        # count that does not divide the indexed dim truncates/ragged-splits
+        # the vector (e.g. IVFPQ64x16 on dim=96 pinned recall at ~0.51).
+        # dim <= 1 means a placeholder parse (the sharded wrapper probes
+        # search_params_space pre-fit) — skip until the real dim is known.
+        if dim > 1 and dim % pq_m != 0:
+            raise ValueError(
+                f"PQ m={pq_m} must divide the indexed dimensionality {dim} "
+                f"(token {tok!r}): each subquantizer codes dim/m contiguous "
+                f"components. Pick m from the divisors of {dim}.")
+
     @register_index("Flat", r"^Flat$", "Flat", examples=("Flat",))
     def _flat(m, rest, dim):
         return FlatIndex(), 0
@@ -377,6 +418,7 @@ def _ensure_builtins():
     @register_index("IVFPQ", r"^IVFPQ(\d+)x(\d+)$", "IVFPQ<nlists>x<m>",
                     examples=("IVFPQ16x8",))
     def _ivfpq(m, rest, dim):
+        _check_pq_m(int(m.group(2)), dim, m.group(0))
         return IVFPQIndex(n_lists=int(m.group(1)), m=int(m.group(2))), 0
 
     @register_index("IVF", r"^IVF(\d+)$",
@@ -387,6 +429,7 @@ def _ensure_builtins():
         if rest:
             pq = re.match(r"^PQ(\d+)$", rest[0])
             if pq:
+                _check_pq_m(int(pq.group(1)), dim, rest[0])
                 return IVFPQIndex(n_lists=n_lists, m=int(pq.group(1))), 1
             if rest[0] == "Flat":
                 return IVFIndex(n_lists=n_lists), 1
@@ -394,6 +437,7 @@ def _ensure_builtins():
 
     @register_index("PQ", r"^PQ(\d+)$", "PQ<m>", examples=("PQ8",))
     def _pq(m, rest, dim):
+        _check_pq_m(int(m.group(1)), dim, m.group(0))
         return PQIndex(m=int(m.group(1))), 0
 
     @register_index("HNSW", r"^HNSW(\d+)$", "HNSW<m>[,Flat][,EP<k>]",
@@ -414,10 +458,12 @@ def _ensure_builtins():
     @register_index(
         "NSG", r"^NSG(\d+)?(?:a(\d+(?:\.\d+)?))?$",
         "NSG[<degree>][a<alpha>][,AH<keep>][,EP<k>][,ND<K>]"
-        "[,PQ<m>x8|,SQ8][,Rerank<k>][,HopFused|,HopStaged]",
+        "[,PQ<m>x8|,SQ8][,Rerank<k>][,HopFused|,HopStaged]"
+        "[,Adapt<patience>[c<compact_every>]]",
         examples=("NSG12", "NSG12,EP8", "NSG12,AH0.9,EP8",
                   "NSG12a1.2,ND16", "NSG12,PQ8x8,Rerank32",
-                  "NSG12,EP8,SQ8,Rerank32", "NSG12,EP8,HopFused"))
+                  "NSG12,EP8,SQ8,Rerank32", "NSG12,EP8,HopFused",
+                  "NSG12,EP8,Adapt8", "NSG12,EP8,Adapt8c16"))
     def _nsg(m, rest, dim):
         degree = int(m.group(1)) if m.group(1) else 32
         alpha = float(m.group(2)) if m.group(2) else 1.0
@@ -425,6 +471,7 @@ def _ensure_builtins():
         backend, knn_k = "auto", None
         dist_backend, pq_m, rerank = "f32", 0, 64
         hop_backend = "auto"
+        patience, compact_every = 0, 0
         for tok in rest:
             em = re.match(r"^EP(\d+)$", tok)
             ah = re.match(r"^AH(0\.\d+|1(?:\.0+)?)$", tok)
@@ -432,6 +479,7 @@ def _ensure_builtins():
             pq = re.match(r"^PQ(\d+)x8$", tok)
             rr = re.match(r"^Rerank(\d+)$", tok)
             hp = re.match(r"^Hop(Fused|Staged)$", tok)
+            ad = re.match(r"^Adapt(\d+)(?:c(\d+))?$", tok)
             if em:
                 ep = int(em.group(1))
             elif ah:
@@ -441,6 +489,7 @@ def _ensure_builtins():
                 if nd.group(1):
                     knn_k = int(nd.group(1))
             elif pq:
+                _check_pq_m(int(pq.group(1)), dim, tok)
                 dist_backend, pq_m = "pq", int(pq.group(1))
             elif tok == "SQ8":
                 dist_backend = "int8"
@@ -448,6 +497,19 @@ def _ensure_builtins():
                 rerank = int(rr.group(1))
             elif hp:
                 hop_backend = hp.group(1).lower()
+            elif ad:
+                patience = int(ad.group(1))
+                if patience < 1:
+                    raise ValueError(
+                        f"Adapt patience must be >= 1 in token {tok!r} "
+                        f"(omit the token to disable adaptive termination)")
+                if ad.group(2):
+                    compact_every = int(ad.group(2))
+                    if compact_every < 1:
+                        raise ValueError(
+                            f"Adapt compact_every must be >= 1 in token "
+                            f"{tok!r} (omit the c<n> suffix to disable "
+                            f"compaction)")
             else:
                 break
             used += 1
@@ -457,7 +519,8 @@ def _ensure_builtins():
             build_knn_k=knn_k if knn_k is not None else degree,
             build_candidates=max(2 * degree, 48), knn_backend=backend,
             dist_backend=dist_backend, pq_m=pq_m, rerank=rerank,
-            hop_backend=hop_backend)
+            hop_backend=hop_backend, patience=patience,
+            compact_every=compact_every)
         return TunedGraphIndex(params), used
 
     # only flag success: a failure above must surface again on retry, not

@@ -14,10 +14,13 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ANNConfig
 from repro.core import antihub as antihub_mod
-from repro.core.beam_search import beam_search, resolve_gather_backend
+from repro.core.beam_search import (
+    beam_search, beam_search_compacted, resolve_gather_backend,
+)
 from repro.core.build import build_knn, reprune_nsg, resolve_backend
 from repro.core.build.nn_descent import nn_descent
 from repro.core.entry_points import EntryPointSelector, fit_entry_points
@@ -84,6 +87,15 @@ class IndexParams:
     # "fused" runs kernels/beam_hop (one Pallas launch per hop — the
     # (Q, R) candidate block never touches HBM). "auto" = fused on TPU.
     hop_backend: str = "auto"
+    # Straggler control (core/beam_search adaptive termination +
+    # compaction). patience=0 keeps the stock full-pool-convergence rule
+    # bit-for-bit; patience=p also stops a lane after p consecutive hops
+    # without a top-k prefix improvement > eps. compact_every=0 serves the
+    # plain batched driver; >0 runs beam_search_compacted with that
+    # hop-slice length (bucket-snapped batch shrinking between slices).
+    patience: int = 0
+    eps: float = 0.0
+    compact_every: int = 0
 
     @staticmethod
     def from_config(cfg: ANNConfig) -> "IndexParams":
@@ -99,7 +111,10 @@ class IndexParams:
             dist_backend=getattr(cfg, "dist_backend", "f32"),
             pq_m=getattr(cfg, "pq_m", 0),
             rerank=getattr(cfg, "rerank", 64),
-            hop_backend=getattr(cfg, "hop_backend", "auto"))
+            hop_backend=getattr(cfg, "hop_backend", "auto"),
+            patience=getattr(cfg, "patience", 0),
+            eps=getattr(cfg, "eps", 0.0),
+            compact_every=getattr(cfg, "compact_every", 0))
 
 
 class TunedGraphIndex:
@@ -121,6 +136,7 @@ class TunedGraphIndex:
         self.codes: Optional[jax.Array] = None       # (N, M) uint8 db codes
         self.codec_backend: Optional[str] = None     # "pq" | "int8"
         self.last_search_stats = None                # BeamStats of last search
+        self.last_compaction_shapes = None           # per-slice batch sizes
 
     # -- build ------------------------------------------------------------
     def fit(self, data: jax.Array, key: Optional[jax.Array] = None, *,
@@ -272,7 +288,10 @@ class TunedGraphIndex:
                ef: Optional[int] = None, mode: Optional[str] = None,
                rerank: Optional[int] = None,
                dist_backend: Optional[str] = None,
-               hop_backend: Optional[str] = None):
+               hop_backend: Optional[str] = None,
+               patience: Optional[int] = None,
+               eps: Optional[float] = None,
+               compact_every: Optional[int] = None):
         """Returns (dists (Q,k) in projected space, original ids (Q,k)).
 
         ``params`` is a ``core.index_api.SearchParams``; explicit keywords
@@ -282,9 +301,13 @@ class TunedGraphIndex:
         ``rerank`` survivors are exactly rescored in f32 — the returned
         distances are exact for reranked entries, ADC approximations when
         ``rerank=0``. ``hop_backend`` ("staged" | "fused" | "auto") picks
-        the per-hop execution (see ``IndexParams.hop_backend``). Per-hop
-        work counters of the latest call are kept on the index — read them
-        via ``search_stats()``.
+        the per-hop execution (see ``IndexParams.hop_backend``).
+        ``patience``/``eps`` enable adaptive early termination (0 = stock
+        convergence, bit-for-bit) and ``compact_every`` > 0 serves through
+        the compacted driver (``core.beam_search.beam_search_compacted``) —
+        its per-slice batch shapes land in ``last_compaction_shapes``.
+        Per-hop work counters of the latest call are kept on the index —
+        read them via ``search_stats()``.
         """
         assert self.graph is not None, "fit() first"
         if params is not None:
@@ -296,35 +319,49 @@ class TunedGraphIndex:
                 dist_backend = getattr(params, "dist_backend", None)
             if hop_backend is None:
                 hop_backend = getattr(params, "hop_backend", None)
+            if patience is None:
+                patience = getattr(params, "patience", None)
+            if eps is None:
+                eps = getattr(params, "eps", None)
+            if compact_every is None:
+                compact_every = getattr(params, "compact_every", None)
         ef = ef or self.params.ef_search
         mode = mode or "while"
         dist_backend = dist_backend or self.params.dist_backend
         rerank = rerank if rerank is not None else self.params.rerank
         hop_backend = hop_backend or self.params.hop_backend
+        patience = patience if patience is not None else self.params.patience
+        eps = eps if eps is not None else self.params.eps
+        compact_every = (compact_every if compact_every is not None
+                         else self.params.compact_every)
         q = self.project(queries)
         entries = self.eps.select(q)
+        # batch-major layout: every hop is one (Q, R) gather_dist block
+        # (Pallas kernel on TPU) — exact-parity with the vmap layout.
+        bs_kw = dict(ef=max(ef, k), mode=mode, hop_backend=hop_backend,
+                     patience=patience or None, eps=eps, with_stats=True)
         if dist_backend == "f32":
-            # batch-major layout: every hop is one (Q, R) gather_dist block
-            # (Pallas kernel on TPU) — exact-parity with the vmap layout.
-            d, i, stats = beam_search(q, self.base, self.graph.neighbors,
-                                      entries, ef=max(ef, k), k=k, mode=mode,
-                                      layout="batched",
-                                      hop_backend=hop_backend,
-                                      with_stats=True)
+            kb = k
         else:
             if self.codec is None or self.codec_backend != dist_backend:
                 self.quantize(dist_backend)
-            lut = self.codec.lut(q)
             # keep enough ADC-ranked survivors for the exact tail to pick
             # a true top-k from
             kb = min(max(rerank, k), max(ef, k))
+            bs_kw.update(dist_backend=dist_backend, codes=self.codes,
+                         lut=self.codec.lut(q))
+        self.last_compaction_shapes = None
+        if compact_every:
+            shape_log: list = []
+            d, i, stats = beam_search_compacted(
+                q, self.base, self.graph.neighbors, entries, k=kb,
+                compact_every=compact_every, shape_log=shape_log, **bs_kw)
+            self.last_compaction_shapes = shape_log
+        else:
             d, i, stats = beam_search(q, self.base, self.graph.neighbors,
-                                      entries, ef=max(ef, k), k=kb, mode=mode,
-                                      layout="batched",
-                                      dist_backend=dist_backend,
-                                      codes=self.codes, lut=lut,
-                                      hop_backend=hop_backend,
-                                      with_stats=True)
+                                      entries, k=kb, layout="batched",
+                                      **bs_kw)
+        if dist_backend != "f32":
             if rerank > 0:
                 d, i = _exact_rerank(q, self.base, i, k)
             else:
@@ -342,13 +379,28 @@ class TunedGraphIndex:
         already resident in the pool (wasted gathers). The staged and
         fused hop backends count identically — work-parity assertions in
         the tests compare these dicts across backends.
+
+        Straggler accounting: ``wasted_hops`` — loop iterations lanes rode
+        after their own termination (what adaptive termination shrinks and
+        compaction cuts off at slice boundaries); ``active_fraction`` —
+        hops / (hops + wasted_hops), the useful share of hop-block rows;
+        ``mean_hops`` / ``p99_hops`` — the per-query hop distribution whose
+        tail is the batch straggler cost.
         """
         s = self.last_search_stats
         if s is None:
             return None
-        return {"hops": int(jnp.sum(s.hops)),
+        hops = np.asarray(s.hops)
+        total = int(hops.sum())
+        wasted = int(jnp.sum(s.wasted_hops))
+        return {"hops": total,
                 "gathered": int(jnp.sum(s.gathered)),
-                "dup_gathered": int(jnp.sum(s.dup_gathered))}
+                "dup_gathered": int(jnp.sum(s.dup_gathered)),
+                "wasted_hops": wasted,
+                "active_fraction": float(total / max(total + wasted, 1)),
+                "mean_hops": float(hops.mean()) if hops.size else 0.0,
+                "p99_hops": float(np.percentile(hops, 99))
+                if hops.size else 0.0}
 
     @property
     def ntotal(self) -> int:
@@ -360,11 +412,13 @@ class TunedGraphIndex:
         return self.input_dim
 
     def search_params_space(self):
-        from repro.core.index_api import ef_search_space, rerank_space
+        from repro.core.index_api import (
+            ef_search_space, patience_space, rerank_space,
+        )
         space = ef_search_space()
         if self.params.dist_backend != "f32" or self.codec is not None:
             space = rerank_space(space)
-        return space
+        return patience_space(space)
 
     def memory_bytes(self) -> int:
         """Index footprint: vectors + graph + entry-point structures +

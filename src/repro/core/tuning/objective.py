@@ -76,6 +76,14 @@ def default_space(dim: int, n: int, max_degree: int = 32,
     staged ops vs the fused kernels/beam_hop launch) — like ef_search it
     never forces a rebuild, so the tuner can let the QPS measurement pick
     the winner per deployment target.
+
+    ``patience`` is the adaptive-termination knob (core/beam_search
+    straggler control): another pure serving knob, and the one the tuner
+    must trade *against recall* — small patience cuts straggler hops
+    (higher QPS) but can stop a lane before its top-k settles. 0 disables
+    (stock full-pool convergence). The range tops out at 16: beyond that
+    the rule almost never fires before natural convergence at these ef
+    ranges, so larger values only waste trials.
     """
     space = (SearchSpace()
              .add("pca_dim", Int(max(8, dim // 4), dim))
@@ -84,7 +92,8 @@ def default_space(dim: int, n: int, max_degree: int = 32,
              .add("alpha", Float(1.0, 1.4))
              .add("ep_clusters", Int(1, max(2, min(256, n // 20)), log=True))
              .add("ef_search", Int(16, 256, log=True))
-             .add("hop_backend", Categorical(("staged", "fused"))))
+             .add("hop_backend", Categorical(("staged", "fused")))
+             .add("patience", Int(0, 16)))
     if quantized:
         space = (space
                  .add("dist_backend", Categorical(("f32", "pq", "int8")))
@@ -250,7 +259,8 @@ class AnnObjective:
         build_s = time.perf_counter() - t0
         ef = max(p.ef_search, self.k)
         kw = dict(ef=ef, dist_backend=p.dist_backend, rerank=p.rerank,
-                  hop_backend=p.hop_backend)
+                  hop_backend=p.hop_backend, patience=p.patience,
+                  eps=p.eps, compact_every=p.compact_every)
         d, i = idx.search(self.queries, self.k, **kw)       # warmup+compile
         jax.block_until_ready(d)
         times = []

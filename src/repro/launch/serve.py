@@ -68,6 +68,17 @@ def main():
                          "family only): staged ops or the fused "
                          "kernels/beam_hop launch; ,HopFused / ,HopStaged "
                          "in-grammar")
+    ap.add_argument("--patience", type=int, default=None,
+                    help="adaptive early termination for graph specs (ann "
+                         "family only): a lane stops after this many hops "
+                         "without top-k improvement; ,Adapt<p> in-grammar")
+    ap.add_argument("--eps", type=float, default=None,
+                    help="minimum top-k distance improvement that counts as "
+                         "progress for --patience (ann family only)")
+    ap.add_argument("--compact-every", type=int, default=None,
+                    help="re-pack surviving lanes into a smaller bucketed "
+                         "batch every N hops (ann family only); ,Adapt<p>c<n>"
+                         " in-grammar")
     args = ap.parse_args()
     spec = get_arch(args.arch)
     cfg = spec.smoke_config
@@ -114,7 +125,10 @@ def main():
                           finish_backend=args.finish_backend,
                           dist_backend=args.dist_backend,
                           rerank=args.rerank,
-                          hop_backend=args.hop_backend)
+                          hop_backend=args.hop_backend,
+                          patience=args.patience,
+                          eps=args.eps,
+                          compact_every=args.compact_every)
         if args.buckets == "off":
             buckets = None
         elif args.buckets == "auto":
@@ -158,6 +172,11 @@ def main():
               f" {queries.shape[0] / dt:.0f} QPS, "
               f"recall@10={recall_at_k(jnp.asarray(ids), ti):.4f}, "
               f"served shapes={shapes} (all pre-warmed)")
+        lat = queue.latency_stats()
+        print(f"  latency p50={lat['p50_ms']:.2f}ms "
+              f"p99={lat['p99_ms']:.2f}ms mean={lat['mean_ms']:.2f}ms "
+              f"over {lat['served']} queries / {lat['flushes']} flushes, "
+              f"batch occupancy={lat['mean_occupancy']:.2f}")
     else:
         raise SystemExit("gnn serving = scoring; use launch/train.py")
 

@@ -115,6 +115,19 @@ def main():
                          "kernels/beam_hop launch; auto = fused on TPU. "
                          "Without --spec the knob is tuned (it is in "
                          "default_space); this pins it instead")
+    ap.add_argument("--patience", type=int, default=None,
+                    help="adaptive early-termination hops (core.beam_search"
+                         " straggler control): a lane stops after this many "
+                         "hops without top-k progress > --eps; 0 = stock "
+                         "convergence. Without --spec the knob is tuned "
+                         "(it is in default_space); this pins it instead")
+    ap.add_argument("--eps", type=float, default=None,
+                    help="top-k improvement threshold that counts as "
+                         "progress for --patience (squared-L2 units)")
+    ap.add_argument("--compact-every", type=int, default=None,
+                    help="active-query compaction slice length: gather "
+                         "surviving lanes into a smaller pow2 bucket every "
+                         "this many hops (0 = plain batched driver)")
     ap.add_argument("--offload", action="store_true",
                     help="with --shards (no --spec): force the host-offload "
                          "streamed tier even when the mesh has enough "
@@ -140,7 +153,10 @@ def main():
                                   finish_backend=args.finish_backend,
                                   dist_backend=args.dist_backend,
                                   rerank=args.rerank,
-                                  hop_backend=args.hop_backend).fit(
+                                  hop_backend=args.hop_backend,
+                                  patience=args.patience,
+                                  eps=args.eps,
+                                  compact_every=args.compact_every).fit(
             data, key=key)
         obj = ShardedRepruneObjective(idx, data, queries, k=10,
                                       recall_floor=args.recall_floor,
@@ -149,14 +165,19 @@ def main():
     elif args.spec:
         index = args.spec
         if (args.dist_backend is not None or args.rerank is not None
-                or args.hop_backend is not None):
+                or args.hop_backend is not None
+                or args.patience is not None or args.eps is not None
+                or args.compact_every is not None):
             from repro.core.index_api import build_index
             index = build_index(args.spec, data, key=key,
                                 knn_backend=args.knn_backend,
                                 finish_backend=args.finish_backend,
                                 dist_backend=args.dist_backend,
                                 rerank=args.rerank,
-                                hop_backend=args.hop_backend)
+                                hop_backend=args.hop_backend,
+                                patience=args.patience,
+                                eps=args.eps,
+                                compact_every=args.compact_every)
         obj = SearchParamsObjective(index, data, queries, k=10,
                                     recall_floor=args.recall_floor,
                                     qps_repeats=3, key=key)
@@ -221,7 +242,10 @@ def main():
                            dist_backend=args.dist_backend or "f32",
                            rerank=args.rerank if args.rerank is not None
                            else 64,
-                           hop_backend=args.hop_backend or "auto")
+                           hop_backend=args.hop_backend or "auto",
+                           patience=args.patience or 0,
+                           eps=args.eps or 0.0,
+                           compact_every=args.compact_every or 0)
         obj = AnnObjective(data, queries, k=10, base_params=base,
                            recall_floor=args.recall_floor, qps_repeats=3)
         space = default_space(args.dim, args.n,

@@ -107,16 +107,25 @@ class MicroBatchQueue:
     ``maybe_flush`` flushes when the batching window has elapsed or the
     largest bucket is full — the latency/throughput trade the window knob
     controls.
+
+    Per-query latency (submit -> flush completion, one sample per queued
+    row) and batch occupancy (real rows / dispatched padded rows per flush)
+    are recorded as they happen; ``latency_stats()`` reduces them to the
+    p50/p99/mean the serve loop reports — the numbers the window knob and
+    the compaction/adaptive-termination knobs actually move.
     """
 
     def __init__(self, search: BucketedSearch, window_s: float = 0.002):
         self.search = search
         self.window_s = window_s
-        self._pending: List[Tuple[int, np.ndarray]] = []
+        self._pending: List[Tuple[int, np.ndarray, float]] = []
         self._pending_rows = 0
         self._oldest: Optional[float] = None
         self._next_ticket = 0
         self.results: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._latency_s: List[float] = []     # one sample per served query
+        self._occupancy: List[float] = []     # rows / padded rows per flush
+        self.flushes = 0
 
     def submit(self, queries) -> int:
         """Enqueue a (n, D) request; returns a ticket for ``results``."""
@@ -125,7 +134,7 @@ class MicroBatchQueue:
             self.flush()
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._pending.append((ticket, q))
+        self._pending.append((ticket, q, time.perf_counter()))
         self._pending_rows += q.shape[0]
         if self._oldest is None:
             self._oldest = time.perf_counter()
@@ -150,14 +159,36 @@ class MicroBatchQueue:
         if not self._pending:
             return
         batch = jnp.asarray(
-            np.concatenate([q for _, q in self._pending], axis=0))
+            np.concatenate([q for _, q, _ in self._pending], axis=0))
+        n_disp = len(getattr(self.search, "dispatched", ()))
         d, i = self.search(batch)
         d, i = np.asarray(d), np.asarray(i)
+        done = time.perf_counter()
+        padded = sum(getattr(self.search, "dispatched", ())[n_disp:])
+        if padded:
+            self._occupancy.append(batch.shape[0] / padded)
+        self.flushes += 1
         row = 0
-        for ticket, q in self._pending:
+        for ticket, q, submitted in self._pending:
             n = q.shape[0]
             self.results[ticket] = (d[row:row + n], i[row:row + n])
+            self._latency_s.extend([done - submitted] * n)
             row += n
         self._pending = []
         self._pending_rows = 0
         self._oldest = None
+
+    def latency_stats(self) -> dict:
+        """Serving distribution so far: per-query latency percentiles (ms)
+        + mean batch occupancy (1.0 = every dispatched row was a real
+        query; below that is bucket-padding overhead)."""
+        lat = np.asarray(self._latency_s, np.float64) * 1e3
+        return {
+            "served": int(lat.size),
+            "flushes": self.flushes,
+            "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            "mean_ms": float(lat.mean()) if lat.size else 0.0,
+            "mean_occupancy": float(np.mean(self._occupancy))
+            if self._occupancy else 0.0,
+        }

@@ -27,9 +27,19 @@ def ann_search_step(index, k: int = 10, params=None,
     """
     def step(queries):
         return index.search(queries, k, params)
+
+    def search_stats():
+        """Traversal stats of the step's most recent search (hops / wasted
+        hops / active_fraction...), when the wrapped index exposes them."""
+        fn = getattr(index, "search_stats", None)
+        return fn() if fn is not None else None
+
+    step.search_stats = search_stats
     if buckets:
         from repro.serve.batching import BucketedSearch
-        return BucketedSearch(step, buckets)
+        wrapped = BucketedSearch(step, buckets)
+        wrapped.search_stats = search_stats
+        return wrapped
     return step
 
 

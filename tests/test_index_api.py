@@ -118,7 +118,8 @@ def test_generic_tuner_is_index_agnostic(small_db):
         study.optimize(obj.single_objective, n_trials=4)
         best = study.best_trial
         assert best.feasible
-        assert set(best.params) <= {"ef_search", "nprobe", "mode", "chunk"}
+        assert set(best.params) <= {"ef_search", "nprobe", "mode",
+                                    "chunk", "patience"}
 
 
 @pytest.mark.slow
